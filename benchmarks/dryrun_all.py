@@ -1,0 +1,80 @@
+"""Fan out the multi-pod dry-run over every (arch x shape x mesh) cell.
+
+One subprocess per cell (jax locks device count at first init). Results are
+cached as artifacts/dryrun/<arch>__<shape>__<sp|mp>.json; existing files are
+skipped so the sweep is resumable.
+
+Usage: PYTHONPATH=src python -m benchmarks.dryrun_all [--multipod-only]
+       [--single-pod-only] [--timeout 3600]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+ARCHS = ["rwkv6-1.6b", "recurrentgemma-2b", "whisper-large-v3",
+         "phi4-mini-3.8b", "qwen3-14b", "pixtral-12b", "mixtral-8x7b",
+         "dbrx-132b", "command-r-plus-104b", "nemotron-4-340b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--multipod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    meshes = []
+    if not args.multipod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+
+    cells = [(a, s, mp) for mp in meshes for a in ARCHS for s in SHAPES]
+    done = fails = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+        path = out / f"{tag}.json"
+        if path.exists():
+            done += 1
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--out", str(out)]
+        if mp:
+            cmd.append("--multipod")
+        t0 = time.time()
+        print(f"[dryrun_all] {tag} ...", flush=True)
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+        except subprocess.TimeoutExpired:
+            path.write_text(json.dumps({"arch": arch, "shape": shape,
+                                        "mesh": "mp" if mp else "sp",
+                                        "status": "timeout"}))
+            print(f"[dryrun_all] {tag} TIMEOUT", flush=True)
+            fails += 1
+            continue
+        if r.returncode != 0:
+            err = (r.stderr or "")[-2000:]
+            path.write_text(json.dumps({"arch": arch, "shape": shape,
+                                        "mesh": "mp" if mp else "sp",
+                                        "status": "error", "stderr": err}))
+            print(f"[dryrun_all] {tag} FAILED\n{err}", flush=True)
+            fails += 1
+        else:
+            done += 1
+            print(f"[dryrun_all] {tag} ok ({time.time()-t0:.0f}s)",
+                  flush=True)
+    print(f"[dryrun_all] finished: {done} ok/skipped, {fails} failures")
+
+
+if __name__ == "__main__":
+    main()

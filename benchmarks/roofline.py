@@ -1,0 +1,116 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell on the single-pod 16x16 mesh:
+    compute term    = HLO_FLOPs/device / 197e12   (bf16 peak, TPU v5e)
+    memory term     = HLO traffic bytes/device / 819e9 (HBM bw)
+    collective term = collective bytes/device / 50e9   (ICI per link,
+                      conservative single-link model — see note)
+All three from the trip-count-aware HLO analysis of the compiled SPMD
+module (launch/hlo_analysis.py). Also reports MODEL_FLOPS = 6*N_act*D
+(train) or 2*N_act*D (inference) per device and the usefulness ratio
+MODEL_FLOPS / HLO_FLOPs.
+
+roofline_fraction = ideal_compute_time / max(term) — i.e. what fraction of
+the bound set by the dominant resource would be spent on model-essential
+math. This is the score §Perf iterates on.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+       [--mesh sp] [--markdown out.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link (conservative: 1 link per phase)
+
+SHAPE_TOKENS = {
+    "train_4k": (4096 * 256, 6.0),      # tokens, flops multiplier (fwd+bwd)
+    "prefill_32k": (32768 * 32, 2.0),
+    "decode_32k": (128, 2.0),           # one token per sequence
+    "long_500k": (1, 2.0),
+}
+
+
+def load(dirpath: str, mesh: str) -> List[Dict]:
+    rows = []
+    for p in sorted(pathlib.Path(dirpath).glob(f"*__{mesh}.json")):
+        rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def analyze_cell(r: Dict) -> Dict:
+    if r.get("status") != "ok":
+        return {"arch": r["arch"], "shape": r["shape"],
+                "status": r.get("status"), "reason": r.get("reason", "")}
+    ndev = r["n_devices"]
+    tokens, mult = SHAPE_TOKENS[r["shape"]]
+    model_flops = mult * r["active_params"] * tokens / ndev
+    # decode shapes re-read the whole KV cache + params per step: model
+    # traffic floor = params + cache bytes (already counted in hlo traffic).
+    compute_t = r["hlo_flops"] / PEAK_FLOPS
+    memory_t = r["hlo_traffic_bytes"] / HBM_BW
+    coll_t = r["collectives"]["total_bytes"] / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t,
+             "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    ideal = model_flops / PEAK_FLOPS
+    frac = ideal / max(max(terms.values()), 1e-30)
+    return {
+        "arch": r["arch"], "shape": r["shape"], "status": "ok",
+        "compute_ms": compute_t * 1e3, "memory_ms": memory_t * 1e3,
+        "collective_ms": coll_t * 1e3, "dominant": dominant,
+        "model_flops": model_flops, "hlo_flops": r["hlo_flops"],
+        "useful_ratio": model_flops / max(r["hlo_flops"], 1.0),
+        "roofline_fraction": frac,
+        "peak_mb": r["memory"]["peak_mb"],
+    }
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    out = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) |"
+           " dominant | useful (6ND/HLO) | roofline frac | peak MiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for a in rows:
+        if a.get("status") != "ok":
+            out.append(f"| {a['arch']} | {a['shape']} | — | — | — | skipped |"
+                       f" — | — | — |")
+            continue
+        out.append(
+            f"| {a['arch']} | {a['shape']} | {a['compute_ms']:.2f} | "
+            f"{a['memory_ms']:.2f} | {a['collective_ms']:.2f} | "
+            f"**{a['dominant']}** | {a['useful_ratio']:.2f} | "
+            f"{a['roofline_fraction']:.2f} | {a['peak_mb']:.0f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="sp", choices=["sp", "mp"])
+    ap.add_argument("--markdown", default="")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    rows = [analyze_cell(r) for r in load(args.dir, args.mesh)]
+    ok = [r for r in rows if r.get("status") == "ok"]
+    md = markdown_table(rows)
+    print(md)
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["collective_ms"] /
+                   max(r["compute_ms"] + r["memory_ms"], 1e-9))
+        print(f"\nworst roofline fraction: {worst['arch']} x "
+              f"{worst['shape']} ({worst['roofline_fraction']:.3f})")
+        print(f"most collective-bound:  {coll['arch']} x {coll['shape']}")
+    if args.markdown:
+        pathlib.Path(args.markdown).write_text(md + "\n")
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

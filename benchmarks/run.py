@@ -1,0 +1,201 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Wall times are CPU-host times
+(the TPU perf story lives in the dry-run roofline, benchmarks/roofline.py);
+the derived column carries the paper-comparable metric.
+
+  table1    Table 1: accuracy + approx error, ours vs exact vs Nystrom vs
+            plain K-means (blob+ring primary geometry, rings secondary)
+  fig3      Fig. 3: error/accuracy vs sampled columns m (seg-proxy data)
+  theorem1  Thm. 1 bound tightness over random PSD matrices
+  memory    memory footprint: ours O(r'n) vs Nystrom O(mn) at matched error
+  kernels   Pallas kernel microbench (interpret mode) vs jnp oracle
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, n=3):
+    fn()  # compile
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(n):
+        out = fn()
+    if out is not None:
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+def table1():
+    from repro.core import (polynomial_kernel, gram_matrix, kmeans,
+                            exact_eig_from_gram, one_pass_kernel_kmeans,
+                            nystrom, linearized_kmeans_from_Y,
+                            clustering_accuracy, kernel_approx_error)
+    from repro.data import blob_ring, two_rings
+
+    kern = polynomial_kernel(gamma=0.0, degree=2)
+    for geom, maker in [("blobring", blob_ring), ("rings", two_rings)]:
+        X, labels = maker(jax.random.PRNGKey(0), 4000)
+        K = gram_matrix(kern, X)
+        t0 = time.perf_counter()
+        ex = exact_eig_from_gram(K, 2)
+        t_ex = (time.perf_counter() - t0) * 1e6
+        acc = clustering_accuracy(labels, linearized_kmeans_from_Y(
+            jax.random.PRNGKey(3), ex.Y, 2).labels, 2)
+        _row(f"table1.{geom}.exact", t_ex,
+             f"err={kernel_approx_error(K, ex.Y):.2f};acc={acc:.2f}")
+        errs, accs, t = [], [], 0.0
+        for s in range(5):
+            t0 = time.perf_counter()
+            res = one_pass_kernel_kmeans(jax.random.PRNGKey(10 + s), kern,
+                                         X, k=2, r=2, oversampling=10)
+            t += (time.perf_counter() - t0) * 1e6
+            errs.append(kernel_approx_error(K, res.Y))
+            accs.append(clustering_accuracy(labels, res.labels, 2))
+        _row(f"table1.{geom}.ours", t / 5,
+             f"err={np.mean(errs):.2f};acc={np.mean(accs):.2f}")
+        for m in (20, 100):
+            errs, accs, t = [], [], 0.0
+            for s in range(5):
+                t0 = time.perf_counter()
+                ny = nystrom(jax.random.PRNGKey(50 + s), kern, X, m=m, r=2)
+                km = linearized_kmeans_from_Y(jax.random.PRNGKey(3), ny.Y, 2)
+                t += (time.perf_counter() - t0) * 1e6
+                errs.append(kernel_approx_error(K, ny.Y))
+                accs.append(clustering_accuracy(labels, km.labels, 2))
+            _row(f"table1.{geom}.nystrom_m{m}", t / 5,
+                 f"err={np.mean(errs):.2f};acc={np.mean(accs):.2f}")
+        t0 = time.perf_counter()
+        km = kmeans(jax.random.PRNGKey(5), X.T, 2)
+        _row(f"table1.{geom}.plain_kmeans",
+             (time.perf_counter() - t0) * 1e6,
+             f"acc={clustering_accuracy(labels, km.labels, 2):.2f}")
+
+
+def fig3():
+    from repro.core import (polynomial_kernel, gram_matrix,
+                            one_pass_kernel_kmeans, nystrom,
+                            linearized_kmeans_from_Y, clustering_accuracy,
+                            kernel_approx_error)
+    from repro.data import segmentation_proxy
+
+    X, labels = segmentation_proxy(jax.random.PRNGKey(1))
+    kern = polynomial_kernel(gamma=0.0, degree=2)
+    K = gram_matrix(kern, X)
+    errs, accs = [], []
+    t0 = time.perf_counter()
+    for s in range(5):
+        res = one_pass_kernel_kmeans(jax.random.PRNGKey(20 + s), kern, X,
+                                     k=7, r=2, oversampling=5)
+        errs.append(kernel_approx_error(K, res.Y))
+        accs.append(clustering_accuracy(labels, res.labels, 7))
+    _row("fig3.ours_rp7", (time.perf_counter() - t0) / 5 * 1e6,
+         f"err={np.mean(errs):.3f};acc={np.mean(accs):.3f}")
+    for m in (10, 20, 50):
+        errs, accs = [], []
+        t0 = time.perf_counter()
+        for s in range(5):
+            ny = nystrom(jax.random.PRNGKey(60 + s), kern, X, m=m, r=2)
+            km = linearized_kmeans_from_Y(jax.random.PRNGKey(3), ny.Y, 7)
+            errs.append(kernel_approx_error(K, ny.Y))
+            accs.append(clustering_accuracy(labels, km.labels, 7))
+        _row(f"fig3.nystrom_m{m}", (time.perf_counter() - t0) / 5 * 1e6,
+             f"err={np.mean(errs):.3f};acc={np.mean(accs):.3f}")
+
+
+def theorem1():
+    from repro.core import theorem1_bounds, best_rank_r
+
+    tight_any, tight_best = [], []
+    t0 = time.perf_counter()
+    for seed in range(15):
+        rng = np.random.RandomState(seed)
+        A = rng.randn(6, 4).astype(np.float32)
+        K = jnp.asarray(A @ A.T)
+        K_hat = best_rank_r(K, 2)
+        excess, bound_any, bound_best = theorem1_bounds(K, K_hat, 2)
+        tight_any.append(excess / max(bound_any, 1e-9))
+        tight_best.append(excess / max(bound_best, 1e-9))
+        assert excess <= bound_best + 1e-3
+    _row("theorem1.tightness", (time.perf_counter() - t0) / 15 * 1e6,
+         f"excess/tr(E)={np.mean(tight_best):.3f};"
+         f"excess/2trnorm={np.mean(tight_any):.3f};violations=0")
+
+
+def memory():
+    """Memory to reach (near-)exact rank-2 error: ours vs Nystrom."""
+    from repro.core import (polynomial_kernel, gram_matrix, nystrom,
+                            exact_eig_from_gram, kernel_approx_error,
+                            randomized_eig)
+    from repro.data import blob_ring
+
+    X, _ = blob_ring(jax.random.PRNGKey(0), 4000)
+    n = 4000
+    kern = polynomial_kernel(gamma=0.0, degree=2)
+    K = gram_matrix(kern, X)
+    eig = randomized_eig(jax.random.PRNGKey(1), kern, X, 2, oversampling=10)
+    err_ours = kernel_approx_error(K, eig.Y)
+    ours_bytes = n * 12 * 4            # W: n x r'
+    m = 12
+    while m <= 512:
+        errs = [kernel_approx_error(K, nystrom(jax.random.PRNGKey(s), kern,
+                                               X, m=m, r=2).Y)
+                for s in range(3)]
+        if np.mean(errs) <= 1.02 * err_ours:
+            break
+        m *= 2
+    ny_bytes = n * m * 4               # C: n x m
+    _row("memory.ours", 0, f"bytes={ours_bytes};err={err_ours:.3f}")
+    _row("memory.nystrom_matched", 0,
+         f"bytes={ny_bytes};m={m};ratio={ny_bytes/ours_bytes:.1f}x")
+
+
+def kernels():
+    from repro.kernels import fwht_pallas, gram_stripe_pallas, assign_pallas
+    from repro.kernels.fwht.ref import fwht_ref
+    from repro.kernels.gram.ref import gram_stripe_ref
+    from repro.kernels.kmeans_assign.ref import assign_ref
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096, 16))
+    us_p = _timeit(lambda: fwht_pallas(x, interpret=True))
+    us_r = _timeit(lambda: fwht_ref(x))
+    err = float(jnp.max(jnp.abs(fwht_pallas(x, interpret=True) -
+                                fwht_ref(x))))
+    _row("kernels.fwht_4096x16", us_p, f"ref_us={us_r:.0f};maxerr={err:.1e}")
+
+    X = jax.random.normal(jax.random.PRNGKey(1), (19, 2048))
+    Xb = X[:, :256]
+    us_p = _timeit(lambda: gram_stripe_pallas(X, Xb, interpret=True))
+    err = float(jnp.max(jnp.abs(gram_stripe_pallas(X, Xb, interpret=True) -
+                                gram_stripe_ref(X, Xb))))
+    _row("kernels.gram_2048x256", us_p, f"maxerr={err:.1e}")
+
+    Y = jax.random.normal(jax.random.PRNGKey(2), (4096, 16))
+    C = jax.random.normal(jax.random.PRNGKey(3), (8, 16))
+    us_p = _timeit(lambda: assign_pallas(Y, C, interpret=True))
+    l1, _ = assign_pallas(Y, C, interpret=True)
+    l2, _ = assign_ref(Y, C)
+    _row("kernels.assign_4096x16x8", us_p,
+         f"label_agreement={float(jnp.mean(l1 == l2)):.4f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table1()
+    fig3()
+    theorem1()
+    memory()
+    kernels()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""End-to-end driver: train a small LM for a few hundred steps on CPU.
+
+Any of the 10 assigned architectures is selectable (reduced config); the
+loss must fall. Uses the same train_step / sharding / checkpoint stack that
+the production launcher lowers for the 512-chip mesh.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--arch mixtral-8x7b]
+     [--steps 200]
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]] + sys.argv[1:]
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if "--steps" not in " ".join(sys.argv):
+        sys.argv += ["--steps", "200"]
+    sys.argv += ["--smoke", "--batch", "4", "--seq", "64",
+                 "--ckpt-dir", "/tmp/repro_ckpt"]
+    main()

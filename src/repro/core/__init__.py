@@ -1,0 +1,14 @@
+"""Core of the paper: one-pass randomized kernel K-means (GlobalSIP 2016)."""
+from repro.core.kernels_fn import (make_kernel, polynomial_kernel, rbf_kernel,
+                                   gram_matrix, stripe_iterator)
+from repro.core.kmeans import kmeans, kmeans_plus_plus, KMeansResult
+from repro.core.sketch import (fwht, make_srht, srht_apply, srht_apply_t,
+                               randomized_eig, one_pass_core, sketch_stream,
+                               next_pow2, SRHT, LowRankEig)
+from repro.core.onepass import one_pass_kernel_kmeans, linearized_kmeans_from_Y
+from repro.core.nystrom import nystrom, NystromResult
+from repro.core.exact import exact_eig, exact_eig_from_gram, ExactEig
+from repro.core.linearized import (objective_from_labels, brute_force_optimal,
+                                   theorem1_bounds, best_rank_r, trace_norm)
+from repro.core.metrics import (clustering_accuracy, nmi, kernel_approx_error,
+                                kernel_approx_error_streaming)

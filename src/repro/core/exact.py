@@ -1,0 +1,31 @@
+"""Exact rank-r eigendecomposition baseline (eq. 5): the accuracy ceiling.
+
+O(n^2) memory, O(n^3) time — only feasible for validation-scale n; the whole
+point of the paper is avoiding this.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.kernels_fn import KernelFn, gram_matrix
+
+
+class ExactEig(NamedTuple):
+    Y: jnp.ndarray        # (r, n)
+    eigvals: jnp.ndarray  # (r,) top-r eigenvalues, descending
+
+
+def exact_eig_from_gram(K: jnp.ndarray, r: int) -> ExactEig:
+    K = 0.5 * (K + K.T)
+    evals, U = jnp.linalg.eigh(K)
+    evals = evals[::-1]
+    U = U[:, ::-1]
+    top = jnp.maximum(evals[:r], 0.0)
+    Y = jnp.sqrt(top)[:, None] * U[:, :r].T
+    return ExactEig(Y=Y, eigvals=top)
+
+
+def exact_eig(kernel: KernelFn, X: jnp.ndarray, r: int) -> ExactEig:
+    return exact_eig_from_gram(gram_matrix(kernel, X), r)

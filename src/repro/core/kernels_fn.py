@@ -1,0 +1,90 @@
+"""Kernel functions and streaming block-gram construction.
+
+The paper never materializes the full kernel matrix K: Alg. 1 consumes K in
+column stripes built on-the-fly from the data matrix X (p x n). This module
+provides the kernel registry and the stripe builders used by the streaming
+sketch (core/sketch.py) and the distributed pipeline (distributed/).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+KernelFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def polynomial_kernel(gamma: float = 0.0, degree: int = 2) -> KernelFn:
+    """kappa(x, y) = (<x, y> + gamma)^degree. gamma=0 -> homogeneous."""
+
+    def fn(X: jnp.ndarray, Y: jnp.ndarray) -> jnp.ndarray:
+        # X: (p, n1), Y: (p, n2) -> (n1, n2)
+        z = X.T @ Y
+        return (z + gamma) ** degree
+
+    return fn
+
+
+def rbf_kernel(gamma: float = 1.0) -> KernelFn:
+    """kappa(x, y) = exp(-gamma * ||x - y||^2)."""
+
+    def fn(X: jnp.ndarray, Y: jnp.ndarray) -> jnp.ndarray:
+        xn = jnp.sum(X * X, axis=0)[:, None]  # (n1, 1)
+        yn = jnp.sum(Y * Y, axis=0)[None, :]  # (1, n2)
+        z = X.T @ Y
+        d2 = jnp.maximum(xn + yn - 2.0 * z, 0.0)
+        return jnp.exp(-gamma * d2)
+
+    return fn
+
+
+def linear_kernel() -> KernelFn:
+    return lambda X, Y: X.T @ Y
+
+
+_REGISTRY = {
+    "polynomial": polynomial_kernel,
+    "rbf": rbf_kernel,
+    "linear": lambda **kw: linear_kernel(),
+}
+
+
+def make_kernel(name: str, **params) -> KernelFn:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown kernel {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**params)
+
+
+def gram_matrix(kernel: KernelFn, X: jnp.ndarray) -> jnp.ndarray:
+    """Full n x n gram matrix — ONLY for small-n tests and exact baselines."""
+    return kernel(X, X)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def gram_stripe(kernel: KernelFn, X: jnp.ndarray, start: jnp.ndarray,
+                block: int) -> jnp.ndarray:
+    """Column stripe K[:, start:start+block] = kappa(X, X[:, start:start+block]).
+
+    jit-compiled once per (kernel, block) and reused across the streaming
+    pass; `start` is a traced scalar so the loop does not recompile.
+    """
+    Xb = jax.lax.dynamic_slice_in_dim(X, start, block, axis=1)
+    return kernel(X, Xb)
+
+
+def stripe_iterator(kernel: KernelFn, X: jnp.ndarray,
+                    block: int) -> Iterator[Tuple[int, jnp.ndarray]]:
+    """Yield (start, K[:, start:start+width]) stripes covering all n columns.
+
+    The last stripe is truncated (not padded) so downstream accumulation
+    indexes stay exact.
+    """
+    n = X.shape[1]
+    for start in range(0, n, block):
+        width = min(block, n - start)
+        if width == block:
+            yield start, gram_stripe(kernel, X, jnp.asarray(start), block)
+        else:
+            yield start, kernel(X, X[:, start:start + width])

@@ -1,0 +1,71 @@
+"""Linearized kernel K-means theory (Sec. 3): objective, Theorem 1 machinery.
+
+L(C) = tr((I - C^T C) K (I - C^T C)) with C the normalized cluster-indicator
+matrix (C C^T = I_K). Since P = C^T C is an orthogonal projection,
+L(C) = tr(K) - tr(C K C^T), which is what we compute.
+
+Includes a brute-force optimal-partition search (tiny n only) used by the
+hypothesis-based property tests of Theorem 1:
+    L(C_hat) - L(C_star) <= 2 ||E||_*          (any PSD K_hat = K - E)
+    L(C_hat) - L(C_star) <= tr(E)              (K_hat = best rank-r approx)
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def objective_from_labels(K: jnp.ndarray, labels: jnp.ndarray,
+                          k: int) -> jnp.ndarray:
+    """L(C) = tr(K) - sum_k (1/|S_k|) sum_{i,j in S_k} K_ij."""
+    onehot = (labels[:, None] == jnp.arange(k)[None, :]).astype(K.dtype)
+    counts = jnp.sum(onehot, axis=0)
+    # C = diag(1/sqrt(counts)) @ onehot^T ; tr(C K C^T) = sum_k s_k / |S_k|
+    per_cluster = jnp.einsum("ik,ij,jk->k", onehot, K, onehot)
+    safe = jnp.where(counts > 0, per_cluster / jnp.maximum(counts, 1.0), 0.0)
+    return jnp.trace(K) - jnp.sum(safe)
+
+
+def brute_force_optimal(K: np.ndarray, k: int) -> Tuple[np.ndarray, float]:
+    """Exact argmin over all surjective k-labelings. n <= ~10 only."""
+    n = K.shape[0]
+    best_labels, best_obj = None, np.inf
+    for labels in itertools.product(range(k), repeat=n):
+        if len(set(labels)) < k:   # every cluster non-empty (paper's C in C)
+            continue
+        obj = float(objective_from_labels(jnp.asarray(K),
+                                          jnp.asarray(labels, jnp.int32), k))
+        if obj < best_obj:
+            best_obj, best_labels = obj, np.asarray(labels)
+    return best_labels, best_obj
+
+
+def trace_norm(E: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(jnp.linalg.svd(E, compute_uv=False))
+
+
+def best_rank_r(K: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Best rank-r PSD approximation of PSD K (truncated eigendecomposition)."""
+    evals, U = jnp.linalg.eigh(K)
+    evals = jnp.maximum(evals[::-1], 0.0)
+    U = U[:, ::-1]
+    return (U[:, :r] * evals[:r][None, :]) @ U[:, :r].T
+
+
+def theorem1_bounds(K: jnp.ndarray, K_hat: jnp.ndarray,
+                    k: int) -> Tuple[float, float, float]:
+    """Return (L(C_hat) - L(C_star), 2||E||_*, tr(E)) via brute force.
+
+    Small-n validation of Theorem 1. C_hat optimizes under K_hat; its excess
+    objective is evaluated under the TRUE K.
+    """
+    Kn = np.asarray(K)
+    _, l_star = brute_force_optimal(Kn, k)
+    labels_hat, _ = brute_force_optimal(np.asarray(K_hat), k)
+    l_hat = float(objective_from_labels(jnp.asarray(Kn),
+                                        jnp.asarray(labels_hat, jnp.int32), k))
+    E = K - K_hat
+    return l_hat - l_star, float(2.0 * trace_norm(E)), float(jnp.trace(E))

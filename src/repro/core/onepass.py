@@ -1,0 +1,56 @@
+"""Algorithm 1: One-Pass Kernel K-means — the paper's end-to-end method.
+
+A distinct preprocessing phase (one-pass randomized linearization of K)
+followed by standard K-means on the transformed samples Y in R^r, exactly as
+the paper advertises ("allows one to leverage existing algorithm libraries").
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+from repro.core.kernels_fn import KernelFn
+from repro.core.kmeans import KMeansResult, kmeans
+
+
+class OnePassResult(NamedTuple):
+    labels: jnp.ndarray
+    Y: jnp.ndarray            # (r, n) linearized samples
+    eigvals: jnp.ndarray      # (r,)
+    kmeans: KMeansResult
+
+
+def one_pass_kernel_kmeans(
+    key: jax.Array,
+    kernel: KernelFn,
+    X: jnp.ndarray,                 # (p, n) data matrix
+    k: int,                         # number of clusters
+    r: int,                         # target rank
+    oversampling: int = 10,         # l; r' = r + l
+    block: int = 512,               # streaming stripe width
+    n_restarts: int = 10,
+    max_iter: int = 20,
+    sketch_type: str = "srht",
+    fwht_fn: Optional[Callable] = None,
+) -> OnePassResult:
+    """Alg. 1 verbatim: lines 1-6 = randomized_eig, line 7 = standard K-means.
+
+    Memory: O(r' n) for the sketch + O(n * block) transient stripe — the
+    kernel matrix is never formed.
+    """
+    k_sketch, k_km = jax.random.split(key)
+    eig = sk.randomized_eig(k_sketch, kernel, X, r, oversampling, block,
+                            sketch_type, fwht_fn)
+    km = kmeans(k_km, eig.Y.T, k, n_restarts=n_restarts, max_iter=max_iter)
+    return OnePassResult(labels=km.labels, Y=eig.Y, eigvals=eig.eigvals,
+                         kmeans=km)
+
+
+def linearized_kmeans_from_Y(key: jax.Array, Y: jnp.ndarray, k: int,
+                             n_restarts: int = 10,
+                             max_iter: int = 20) -> KMeansResult:
+    """Line 7 alone: K-means on any (r, n) linearization (exact / Nystrom)."""
+    return kmeans(key, Y.T, k, n_restarts=n_restarts, max_iter=max_iter)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (two_rings, blob_ring, gaussian_blobs,
+                                  segmentation_proxy)

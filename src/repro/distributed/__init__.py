@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (param_pspecs, batch_pspecs,
+                                        cache_pspecs, state_pspecs,
+                                        maybe_shard, activation_sharding)

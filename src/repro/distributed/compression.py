@@ -1,0 +1,105 @@
+"""Sketched gradient all-reduce with error feedback (beyond-paper).
+
+Reuses the paper's SRHT primitive Omega^T = R^T H D as a gradient
+compressor for data-parallel training: instead of all-reducing the full
+n-dim gradient, each worker all-reduces the r'-dim sketch s = Omega^T g
+(n/r' x less cross-pod traffic) and applies the projection
+ĝ = Omega s = Omega Omega^T g. Because Omega has exactly orthonormal
+columns ((R^T H D)(D H R) = I), ĝ is an orthogonal projection of g onto a
+random r'-dim subspace; the residual e = g - ĝ is carried by error
+feedback (EF-SGD, Stich et al.) so the update is unbiased over time.
+
+The same `signs/rows` must be used by all workers in a round (seeded from
+the step counter) and SHOULD be rotated every step so the projection
+subspace varies — both handled by `sketch_round_keys`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import fwht, next_pow2
+
+
+def _flatten(tree) -> Tuple[jnp.ndarray, Any, list]:
+    leaves, treedef = jax.tree.flatten(tree)
+    sizes = [l.size for l in leaves]
+    vec = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                           for l in leaves])
+    return vec, treedef, [(l.shape, l.dtype) for l in leaves]
+
+
+def _unflatten(vec, treedef, metas):
+    out = []
+    off = 0
+    for shape, dtype in metas:
+        size = 1
+        for s in shape:
+            size *= s
+        out.append(vec[off:off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+def sketch_params(key: jax.Array, n: int, r_prime: int):
+    """(signs, rows) of the round's Omega = D H R; n padded internally."""
+    n_pad = next_pow2(n)
+    k1, k2 = jax.random.split(key)
+    signs = jax.random.rademacher(k1, (n_pad,), dtype=jnp.float32)
+    rows = jax.random.choice(k2, n_pad, (r_prime,), replace=False)
+    return signs, rows
+
+
+def compress(vec: jnp.ndarray, signs: jnp.ndarray,
+             rows: jnp.ndarray) -> jnp.ndarray:
+    """s = Omega^T g = R^T H (D g).  vec: (n,) -> (r',)."""
+    n_pad = signs.shape[0]
+    g = jnp.pad(vec, (0, n_pad - vec.shape[0])) * signs
+    return fwht(g[:, None])[:, 0][rows]
+
+
+def decompress(s: jnp.ndarray, signs: jnp.ndarray, rows: jnp.ndarray,
+               n: int) -> jnp.ndarray:
+    """ĝ = Omega s = D H R s -> (n,)."""
+    n_pad = signs.shape[0]
+    scat = jnp.zeros((n_pad,), s.dtype).at[rows].set(s)
+    return (fwht(scat[:, None])[:, 0] * signs)[:n]
+
+
+def make_sketched_grad_transform(params_like, r_prime: int,
+                                 axis: Optional[str] = None):
+    """Returns (transform, init_ef_state).
+
+    transform(grads, ef_state, step_key) -> (grads_hat, new_ef_state):
+      1. v = flatten(grads) + ef
+      2. s = compress(v)  (all-reduced over `axis` when inside shard_map /
+         pmapped data-parallel training; with jit+GSPMD the mean is already
+         global, so axis=None just applies the projection)
+      3. ĝ = decompress(s); ef' = v - ĝ
+    """
+    vec0, treedef, metas = _flatten(jax.tree.map(jnp.zeros_like, params_like))
+    n = vec0.shape[0]
+
+    def init_ef():
+        return jnp.zeros((n,), jnp.float32)
+
+    def transform(grads, ef, key):
+        vec, _, _ = _flatten(grads)
+        v = vec + ef
+        signs, rows = sketch_params(key, n, r_prime)
+        s = compress(v, signs, rows)
+        if axis is not None:
+            s = jax.lax.pmean(s, axis)
+        g_hat = decompress(s, signs, rows, n)
+        new_ef = v - g_hat
+        return _unflatten(g_hat, treedef, metas), new_ef
+
+    return transform, init_ef
+
+
+def compression_ratio(params_like, r_prime: int) -> float:
+    n = sum(l.size for l in jax.tree.leaves(params_like))
+    return n / r_prime

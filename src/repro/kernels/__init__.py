@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+fwht/          in-VMEM radix-2 butterfly Walsh-Hadamard transform (the
+               preconditioning transform H of Omega = D H R)
+gram/          blocked kernel-matrix stripes on the MXU with the kernel
+               nonlinearity fused (the streaming pass K[:, block])
+kmeans_assign/ fused distance + argmin for the Lloyd assignment step
+
+Each subpackage ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper, interpret=True on CPU) and ref.py (pure-jnp oracle used by
+the allclose test sweeps).
+"""
+from repro.kernels.fwht.ops import fwht_pallas
+from repro.kernels.gram.ops import gram_stripe_pallas
+from repro.kernels.kmeans_assign.ops import assign_pallas

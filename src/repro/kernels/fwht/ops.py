@@ -1,0 +1,50 @@
+"""Public jit'd wrapper for the FWHT Pallas kernel.
+
+Handles the two-level factorization H_n = (H_a (x) I_b)(I_a (x) H_b) for n
+beyond a single VMEM slab: sweep 1 applies H_b inside contiguous length-b
+blocks, sweep 2 applies H_a across blocks (via a transpose so the strided
+butterflies become contiguous again). Both sweeps reuse the same fused-stage
+kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fwht.fwht import fwht_1level
+
+# Max rows for a single-level slab: 2^13 x 128 lanes x 4B = 4 MiB of VMEM
+# (input + stacked temporaries stay < 16 MiB).
+_MAX_SINGLE = 1 << 13
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("normalize", "col_tile",
+                                             "interpret"))
+def fwht_pallas(x: jnp.ndarray, normalize: bool = True, col_tile: int = 128,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """FWHT along axis 0 of (n, c); n = 2^m. Pallas on TPU, interpret on CPU."""
+    interp = _is_cpu() if interpret is None else interpret
+    n, c = x.shape
+    if n & (n - 1):
+        raise ValueError(f"power-of-two length required, got {n}")
+    if n <= _MAX_SINGLE:
+        return fwht_1level(x, col_tile, normalize, interp)
+    # Two-level: n = a * b with b = _MAX_SINGLE.
+    b = _MAX_SINGLE
+    a = n // b
+    # Sweep 1: H_b within blocks. (a*b, c) -> treat as a separate columns.
+    xb = x.reshape(a, b, c).transpose(1, 0, 2).reshape(b, a * c)
+    xb = fwht_1level(xb, col_tile, False, interp)
+    # Sweep 2: H_a across blocks.
+    xa = xb.reshape(b, a, c).transpose(1, 0, 2).reshape(a, b * c)
+    xa = fwht_1level(xa, col_tile, False, interp)
+    out = xa.reshape(a, b, c)
+    if normalize:
+        out = out / jnp.sqrt(jnp.asarray(n, x.dtype))
+    return out.reshape(n, c)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the FWHT Pallas kernel."""
+import jax.numpy as jnp
+
+
+def fwht_ref(x: jnp.ndarray, normalize: bool = True) -> jnp.ndarray:
+    """Walsh-Hadamard transform along axis 0; x: (n, c), n = 2^m."""
+    n = x.shape[0]
+    if n & (n - 1):
+        raise ValueError(f"FWHT needs power-of-two length, got {n}")
+    shape = x.shape
+    x = x.reshape(n, -1)
+    h = 1
+    while h < n:
+        x = x.reshape(n // (2 * h), 2, h, -1)
+        a, b = x[:, 0], x[:, 1]
+        x = jnp.stack([a + b, a - b], axis=1)
+        h *= 2
+    x = x.reshape(shape)
+    if normalize:
+        x = x / jnp.sqrt(jnp.asarray(n, x.dtype))
+    return x

@@ -1,0 +1,46 @@
+"""Public jit'd wrapper for the gram-stripe Pallas kernel (pads to tiles)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram.gram import gram_stripe_call
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = size % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, mult - rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "gamma", "degree",
+                                             "row_tile", "interpret"))
+def gram_stripe_pallas(X: jnp.ndarray, Xb: jnp.ndarray,
+                       kind: str = "polynomial", gamma: float = 0.0,
+                       degree: int = 2, row_tile: int = 256,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """kappa(X, Xb) -> (n, w). Pads n and w up to MXU-aligned tiles.
+
+    NOTE on RBF padding: padded columns of X are zero vectors, giving
+    spurious exp(-gamma*||x||^2) entries in padded ROWS — they are sliced
+    away before returning, and padded w columns likewise, so the visible
+    result is exact.
+    """
+    interp = _is_cpu() if interpret is None else interpret
+    p, n = X.shape
+    w = Xb.shape[1]
+    row_tile = min(row_tile, max(128, 1 << (n - 1).bit_length()))
+    Xp = _pad_to(X, 1, row_tile)
+    Xbp = _pad_to(Xb, 1, 128)
+    out = gram_stripe_call(Xp, Xbp, kind, gamma, degree, row_tile, interp)
+    return out[:n, :w]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the blocked gram-stripe Pallas kernel."""
+import jax.numpy as jnp
+
+
+def gram_stripe_ref(X: jnp.ndarray, Xb: jnp.ndarray, kind: str = "polynomial",
+                    gamma: float = 0.0, degree: int = 2) -> jnp.ndarray:
+    """K[:, block] = kappa(X, Xb). X: (p, n), Xb: (p, w) -> (n, w)."""
+    z = X.T @ Xb
+    if kind == "polynomial":
+        return (z + gamma) ** degree
+    if kind == "rbf":
+        xn = jnp.sum(X * X, axis=0)[:, None]
+        yn = jnp.sum(Xb * Xb, axis=0)[None, :]
+        return jnp.exp(-gamma * jnp.maximum(xn + yn - 2.0 * z, 0.0))
+    if kind == "linear":
+        return z
+    raise ValueError(kind)

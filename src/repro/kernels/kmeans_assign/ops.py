@@ -1,0 +1,34 @@
+"""Public jit'd wrapper for the fused K-means assignment kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans_assign.kmeans_assign import assign_call
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
+def assign_pallas(Y: jnp.ndarray, C: jnp.ndarray, row_tile: int = 512,
+                  interpret: bool | None = None):
+    """Fused assignment: Y (n, r), C (k, r) -> (labels (n,), min_d2 (n,)).
+
+    Pads n to the row tile, r to 128 lanes, k to 8 sublanes; padded rows are
+    sliced off, padded centroids masked inside the kernel.
+    """
+    interp = _is_cpu() if interpret is None else interpret
+    n, r = Y.shape
+    k = C.shape[0]
+    row_tile = min(row_tile, max(8, 1 << (n - 1).bit_length()))
+    n_pad = -(-n // row_tile) * row_tile
+    r_pad = -(-r // 128) * 128
+    k_pad = -(-k // 8) * 8
+    Yp = jnp.pad(Y, ((0, n_pad - n), (0, r_pad - r)))
+    Cp = jnp.pad(C, ((0, k_pad - k), (0, r_pad - r)))
+    labels, d2 = assign_call(Yp, Cp, k, row_tile, interp)
+    return labels[:n], d2[:n]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused K-means assignment kernel."""
+import jax.numpy as jnp
+
+
+def assign_ref(Y: jnp.ndarray, C: jnp.ndarray):
+    """Y: (n, r) samples, C: (k, r) centroids.
+
+    Returns (labels (n,) int32, min_d2 (n,) f32) with squared distances.
+    """
+    yn = jnp.sum(Y * Y, axis=1)[:, None]
+    cn = jnp.sum(C * C, axis=1)[None, :]
+    d2 = jnp.maximum(yn + cn - 2.0 * (Y @ C.T), 0.0)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)

@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the right step function (train_4k -> train_step,
+prefill_32k -> prefill_step, decode_32k / long_500k -> decode_step) with
+full production shardings against ShapeDtypeStruct inputs (no allocation),
+compiles it, and records:
+  - memory_analysis (bytes per device: argument/output/temp/peak),
+  - cost_analysis (per-device HLO flops / bytes accessed),
+  - the collective-bytes breakdown parsed from the post-SPMD HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), which §Roofline consumes.
+
+One cell per process invocation (device count is locked at first jax init);
+benchmarks/dryrun_all.py fans these out.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k [--multipod] [--out artifacts/dryrun]
+"""
+import argparse
+import functools
+import json
+import pathlib
+import re
+import sys
+import time
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             overrides: dict = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.models.registry import get_api
+    from repro.launch import specs
+    from repro.launch.mesh import (make_production_mesh, dp_axes,
+                                   mesh_axis_sizes)
+    from repro.distributed import sharding as shd
+    from repro.train import steps as tsteps
+
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    ok, why = specs.cell_supported(cfg, shape)
+    res = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        res.update(status="skipped", reason=why)
+        out_path = pathlib.Path(out_dir)
+        out_path.mkdir(parents=True, exist_ok=True)
+        fname = f"{arch}__{shape}__{'mp' if multi_pod else 'sp'}.json"
+        (out_path / fname).write_text(json.dumps(res, indent=1))
+        return res
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sizes = mesh_axis_sizes(mesh)
+    tp = sizes.get("model", 1)
+    dp_total = 1
+    for a in dp_axes(mesh):
+        dp_total *= sizes[a]
+    sh = specs.SHAPES[shape]
+    B, S = sh["batch"], sh["seq"]
+    api = get_api(cfg)
+    key = jax.random.PRNGKey(0)
+    ns = lambda spec: jax.tree.map(
+        lambda p: NamedSharding(mesh, p), spec,
+        is_leaf=lambda x: isinstance(x, P))
+    groups = dp_total if (B % dp_total == 0 and B * min(S, 1) >= 0) else 1
+    if B % dp_total != 0:
+        groups = 1
+
+    t0 = time.time()
+    seq_axis = "model" if cfg.seq_shard_acts else None
+    with mesh:
+        with shd.activation_sharding(dp_axes(mesh), seq_axis=seq_axis,
+                                     seq_div=tp):
+            if sh["kind"] == "train":
+                state_shape = jax.eval_shape(
+                    lambda: tsteps.init_train_state(key, cfg, api, tp))
+                state_spec = shd.state_pspecs(state_shape, mesh,
+                                              zero1=cfg.zero1)
+                batch_shape = specs.train_inputs(cfg, S, B)
+                batch_spec = shd.batch_pspecs(batch_shape, mesh)
+                # Microbatch count must keep per-microbatch batch divisible
+                # by dp (DESIGN.md §5).
+                micro = min(cfg.microbatches, max(1, B // dp_total))
+                while (B // micro) % dp_total and micro > 1:
+                    micro -= 1
+                import dataclasses
+                cfg_run = dataclasses.replace(cfg, microbatches=micro)
+                pregather_spec = (shd.param_pspecs(state_shape.params, mesh,
+                                                   use_fsdp=False)
+                                  if cfg.pregather else None)
+                grad_spec = shd.param_pspecs(state_shape.params, mesh,
+                                             use_fsdp=True)
+                step = tsteps.make_train_step(cfg_run, api, groups=groups,
+                                              pregather_spec=pregather_spec,
+                                              grad_spec=grad_spec)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(ns(state_spec), ns(batch_spec)),
+                    out_shardings=(ns(state_spec), None),
+                    donate_argnums=(0,),   # state double-buffer elided
+                ).lower(state_shape, batch_shape)
+            elif sh["kind"] == "prefill":
+                params_shape = jax.eval_shape(
+                    lambda: api.init(key, cfg, tp))
+                params_spec = shd.param_pspecs(params_shape, mesh)
+                batch_shape = specs.prefill_inputs(cfg, S, B)
+                batch_spec = shd.batch_pspecs(batch_shape, mesh)
+                cache_shape = specs.cache_specs(cfg, api, B, S)
+                cache_spec = shd.cache_pspecs(cache_shape, mesh)
+                step = tsteps.make_prefill_step(cfg, api, groups=groups)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(ns(params_spec), ns(batch_spec),
+                                  ns(cache_spec)),
+                    out_shardings=(None, ns(cache_spec)),
+                    donate_argnums=(2,),   # cache updated in place
+                ).lower(params_shape, batch_shape, cache_shape)
+            else:  # decode
+                params_shape = jax.eval_shape(
+                    lambda: api.init(key, cfg, tp))
+                params_spec = shd.param_pspecs(params_shape, mesh)
+                cache_shape = specs.cache_specs(cfg, api, B, S)
+                cache_spec = shd.cache_pspecs(cache_shape, mesh)
+                tokens_shape = specs.decode_tokens(cfg, B)
+                tok_spec = shd.batch_pspecs({"t": tokens_shape}, mesh)["t"]
+                step = tsteps.make_decode_step(cfg, api, groups=groups)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(ns(params_spec), ns(tok_spec),
+                                  ns(cache_spec)),
+                    out_shardings=(ns(tok_spec), None, ns(cache_spec)),
+                    donate_argnums=(2,),   # cache updated in place
+                ).lower(params_shape, tokens_shape, cache_shape)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    from repro.launch.hlo_analysis import analyze
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # Trip-count-aware analysis (XLA's cost_analysis counts while bodies
+    # once; ours multiplies by scan/microbatch trip counts).
+    hres = analyze(hlo)
+    coll = {"bytes": hres["collective_bytes"],
+            "counts": hres["collective_counts"],
+            "total_bytes": hres["collective_total"]}
+    res.update(
+        status="ok",
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        n_devices=int(mesh.devices.size),
+        memory=dict(
+            argument_mb=round(getattr(mem, "argument_size_in_bytes", 0) / 2**20, 1),
+            output_mb=round(getattr(mem, "output_size_in_bytes", 0) / 2**20, 1),
+            temp_mb=round(getattr(mem, "temp_size_in_bytes", 0) / 2**20, 1),
+            peak_mb=round((getattr(mem, "argument_size_in_bytes", 0)
+                           + getattr(mem, "temp_size_in_bytes", 0)) / 2**20, 1),
+        ),
+        cost=dict(flops=float(cost.get("flops", 0.0)),
+                  bytes_accessed=float(cost.get("bytes accessed", 0.0))),
+        hlo_flops=hres["flops"],
+        hlo_traffic_bytes=hres["traffic_bytes"],
+        collectives=coll,
+        params=cfg.param_count(),
+        active_params=cfg.active_param_count(),
+        microbatches=locals().get("micro", 1),
+        groups=groups,
+    )
+    out_path = pathlib.Path(out_dir)
+    out_path.mkdir(parents=True, exist_ok=True)
+    fname = f"{arch}__{shape}__{'mp' if multi_pod else 'sp'}.json"
+    (out_path / fname).write_text(json.dumps(res, indent=1))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=["train_4k",
+                    "prefill_32k", "decode_32k", "long_500k"])
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--overrides", default="",
+                    help="JSON dict of ArchConfig overrides (perf iters)")
+    args = ap.parse_args()
+    overrides = json.loads(args.overrides) if args.overrides else None
+    res = run_cell(args.arch, args.shape, args.multipod, args.out, overrides)
+    print(json.dumps(res, indent=1))
+    if res["status"] == "ok":
+        print(f"\nOK {args.arch} x {args.shape} "
+              f"[{res['mesh']}] peak={res['memory']['peak_mb']} MiB/dev "
+              f"flops={res['hlo_flops']:.3e} "
+              f"coll={res['collectives']['total_bytes']:.3e}B")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,268 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in cost_analysis counts `while` bodies ONCE, so scanned-layer /
+microbatched programs under-report FLOPs, bytes and collective traffic by
+the loop trip counts. This module parses the post-SPMD HLO text, builds the
+computation call graph (while body/condition edges carry the loop trip
+count, fusion/call edges carry 1) and accumulates:
+
+  - dot FLOPs            2 * prod(batch+free dims) * prod(contracting dims)
+  - HBM traffic          operand + output bytes of top-level fusions/dots/
+                         copies/dynamic-slices (post-fusion HLO: each
+                         top-level op is roughly one HBM round trip)
+  - collective bytes     per collective kind, shape bytes * trip weight
+
+Trip counts come from the `constant(N)` in the while condition computation
+(jax scans lower to 0..N LT-loops). Conservative fallbacks: unknown trip
+count -> 1 (matches XLA's own behaviour, and is logged).
+
+This is an approximation (elementwise FLOPs ignored; fusion traffic assumes
+one read per operand) — but it is *structurally* exact for loops, which is
+the term that matters at 96 layers x 16 microbatches. Validated against
+hand-computable programs in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_elems_bytes(s: str) -> Tuple[int, int]:
+    m = _SHAPE_RE.match(s)
+    if not m:
+        return 0, 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n, n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _all_shapes_bytes(text: str) -> int:
+    return sum(_shape_elems_bytes(m.group(0))[1]
+               for m in _SHAPE_RE.finditer(text))
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str            # result shape text (may be tuple "(a, b)")
+    kind: str             # opcode
+    rest: str             # full remainder of the line
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = re.sub(r"/\*.*?\*/", "", raw).rstrip()
+        # Computation header: `%name (args) -> type {` or `ENTRY %name ...`
+        m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$",
+                     line)
+        if m and not line.startswith(" "):
+            cur = Computation(m.group(1), [])
+            comps[cur.name] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        ls = line.strip()
+        om = re.match(r"(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+"
+                      r"([\w\-]+)\((.*)$", ls)
+        if om:
+            name, shape, kind, rest = om.groups()
+            cur.ops.append(Op(name, shape, kind, rest))
+    return comps
+
+
+def _callees(op: Op) -> List[Tuple[str, str]]:
+    """(role, computation) edges out of an op."""
+    out = []
+    for role in ("body", "condition", "calls", "to_apply",
+                 "branch_computations"):
+        m = re.search(role + r"=\{([^}]*)\}", op.rest)
+        if m:
+            for c in m.group(1).split(","):
+                name = c.strip().lstrip("%")
+                if name:
+                    out.append((role, name))
+            continue
+        m = re.search(role + r"=%([\w.\-]+)", op.rest)
+        if m:
+            out.append((role, m.group(1)))
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest s32 constant in the condition computation (jax scan:
+    `i < N`). Fallback 1."""
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.search(r"constant\((\-?\d+)\)", "constant(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+        # constants may hide inside wrapped_compare fusions' operands —
+        # also scan the raw rest text.
+        for m in re.finditer(r"constant\((\d+)\)", op.rest):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def computation_weights(comps: Dict[str, Computation]
+                        ) -> Tuple[Dict[str, float], set]:
+    """weight(C) = sum over call sites of weight(parent) * trip_count.
+
+    Also returns the set of 'fused' computations (reached via calls= /
+    to_apply= rather than while body/condition): ops inside those live in
+    registers/VMEM, so they carry FLOPs but NOT HBM traffic.
+    """
+    called = set()
+    fused = set()
+    edges: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    for cname, comp in comps.items():
+        for op in comp.ops:
+            if op.kind == "while":
+                body = cond = None
+                for role, callee in _callees(op):
+                    if role == "body":
+                        body = callee
+                    elif role == "condition":
+                        cond = callee
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                if body in edges:
+                    edges[body].append((cname, float(max(trips, 1))))
+                if cond in edges:
+                    edges[cond].append((cname, float(max(trips, 1) + 1)))
+                called.update(x for x in (body, cond) if x)
+            else:
+                for role, callee in _callees(op):
+                    if callee in edges:
+                        edges[callee].append((cname, 1.0))
+                        called.add(callee)
+                        fused.add(callee)
+    # Fusion-reachability is transitive.
+    changed = True
+    while changed:
+        changed = False
+        for cname, comp in comps.items():
+            if cname not in fused:
+                continue
+            for op in comp.ops:
+                for _, callee in _callees(op):
+                    if callee in comps and callee not in fused:
+                        fused.add(callee)
+                        changed = True
+    roots = [c for c in comps if c not in called]
+    weights: Dict[str, float] = {}
+
+    def weight(c: str, stack=()) -> float:
+        if c in weights:
+            return weights[c]
+        if c in stack:          # recursion guard
+            return 1.0
+        if c in roots or not edges[c]:
+            weights[c] = 1.0
+            return 1.0
+        w = sum(weight(p, stack + (c,)) * t for p, t in edges[c])
+        weights[c] = w
+        return w
+
+    for c in comps:
+        weight(c)
+    return weights, fused
+
+
+def _operands(op: Op) -> List[str]:
+    """Operand names: %refs inside the call parens (before attributes)."""
+    depth = 1
+    end = len(op.rest)
+    for i, ch in enumerate(op.rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%([\w.\-]+)", op.rest[:end])
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    """FLOPs of a dot: 2 * output elems * contraction size."""
+    out_elems, _ = _shape_elems_bytes(op.shape.strip("("))
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    if not m:
+        return 2.0 * out_elems  # degenerate
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    ops_ = _operands(op)
+    lhs_shape = shapes.get(ops_[0], "") if ops_ else ""
+    dm = _SHAPE_RE.match(lhs_shape.strip("("))
+    if not dm:
+        return 2.0 * out_elems
+    dims = [int(x) for x in dm.group(2).split(",") if x]
+    csize = 1
+    for cd in cdims:
+        if cd < len(dims):
+            csize *= dims[cd]
+    return 2.0 * out_elems * csize
+
+
+_TRAFFIC_KINDS = {"fusion", "dot", "convolution", "copy", "dynamic-slice",
+                  "dynamic-update-slice", "gather", "scatter", "transpose",
+                  "reshape", "broadcast", "reduce", "concatenate", "slice",
+                  "sort", "iota", "select-and-scatter", "pad"}
+
+
+def analyze(text: str) -> Dict:
+    comps = parse_hlo(text)
+    weights, fused = computation_weights(comps)
+    flops = 0.0
+    traffic = 0.0
+    coll_bytes = {c: 0.0 for c in _COLLECTIVES}
+    coll_counts = {c: 0.0 for c in _COLLECTIVES}
+    for cname, comp in comps.items():
+        w = weights.get(cname, 1.0)
+        shapes = {op.name: op.shape for op in comp.ops}
+        in_fusion = cname in fused
+        for op in comp.ops:
+            if op.kind == "dot":
+                flops += w * _dot_flops(op, shapes)
+            if op.kind in _COLLECTIVES:
+                nbytes = _all_shapes_bytes(op.shape)
+                coll_bytes[op.kind] += w * nbytes
+                coll_counts[op.kind] += w
+            # HBM traffic: only top-level (non-fusion-internal) ops touch
+            # HBM; fusion internals live in registers/VMEM.
+            if not in_fusion and op.kind in _TRAFFIC_KINDS:
+                out_b = _all_shapes_bytes(op.shape)
+                in_b = sum(_shape_elems_bytes(shapes.get(o, ""))[1]
+                           for o in _operands(op))
+                traffic += w * (out_b + in_b)
+    return {
+        "flops": flops,
+        "traffic_bytes": traffic,
+        "collective_bytes": coll_bytes,
+        "collective_counts": coll_counts,
+        "collective_total": sum(coll_bytes.values()),
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,107 @@
+"""Input ShapeDtypeStruct builders for every (arch x shape) cell.
+
+The assigned shape grid (all 10 LM-family archs):
+    train_4k     seq=4096   global_batch=256   -> train_step
+    prefill_32k  seq=32768  global_batch=32    -> prefill_step
+    decode_32k   seq=32768  global_batch=128   -> decode_step (KV cache 32k)
+    long_500k    seq=524288 global_batch=1     -> decode_step, sub-quadratic
+                                                  archs only (DESIGN.md §4)
+
+`concrete=False` returns ShapeDtypeStructs (dry-run: no allocation);
+`concrete=True` returns real arrays (smoke tests / examples) — only valid
+for reduced configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# Archs for which long_500k decode is runnable (bounded state/window);
+# everything else is a documented skip (DESIGN.md §4).
+LONG_OK = {"recurrentgemma-2b", "rwkv6-1.6b", "mixtral-8x7b"}
+
+
+def cell_supported(cfg: ArchConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and cfg.name not in LONG_OK:
+        return False, ("pure full-attention arch: 500k-token decode is "
+                       "quadratic/HBM-infeasible; skipped per assignment")
+    return True, ""
+
+
+def _mk(shape, dtype, concrete, key=None, maxval=None):
+    if not concrete:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if dtype in (jnp.int32, "int32"):
+        return jax.random.randint(key, shape, 0, maxval or 2, jnp.int32)
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def train_inputs(cfg: ArchConfig, seq: int, batch: int,
+                 concrete: bool = False, key=None) -> Dict[str, Any]:
+    """Batch dict for train_step. Token budget == seq per sample; modality
+    prefixes (whisper frames / pixtral patches) occupy their slice of it."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    act_dtype = jnp.dtype(cfg.dtype)
+    V = cfg.vocab_size
+    if cfg.family == "encdec":
+        return {
+            "frames": _mk((batch, cfg.n_audio_frames, cfg.d_model),
+                          act_dtype, concrete, ks[0]),
+            "tokens": _mk((batch, seq), jnp.int32, concrete, ks[1], V),
+            "labels": _mk((batch, seq), jnp.int32, concrete, ks[2], V),
+        }
+    if cfg.family == "vlm":
+        n_patch = min(cfg.n_patch_tokens, seq // 2)
+        return {
+            "patches": _mk((batch, n_patch, cfg.d_model), act_dtype,
+                           concrete, ks[0]),
+            "tokens": _mk((batch, seq - n_patch), jnp.int32, concrete,
+                          ks[1], V),
+            # labels cover patch prefix (masked -1) + text.
+            "labels": (_mk((batch, seq), jnp.int32, concrete, ks[2], V)
+                       if not concrete else
+                       jnp.concatenate([
+                           jnp.full((batch, n_patch), -1, jnp.int32),
+                           jax.random.randint(ks[2], (batch, seq - n_patch),
+                                              0, V, jnp.int32)], axis=1)),
+        }
+    return {
+        "tokens": _mk((batch, seq), jnp.int32, concrete, ks[1], V),
+        "labels": _mk((batch, seq), jnp.int32, concrete, ks[2], V),
+    }
+
+
+def prefill_inputs(cfg: ArchConfig, seq: int, batch: int,
+                   concrete: bool = False, key=None) -> Dict[str, Any]:
+    b = train_inputs(cfg, seq, batch, concrete, key)
+    b.pop("labels", None)
+    return b
+
+
+def decode_tokens(cfg: ArchConfig, batch: int, concrete: bool = False,
+                  key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return _mk((batch,), jnp.int32, concrete, key, cfg.vocab_size)
+
+
+def cache_specs(cfg: ArchConfig, api, batch: int, max_seq: int,
+                concrete: bool = False, dtype=jnp.bfloat16):
+    """Cache as ShapeDtypeStructs (dry-run) or zeros (smoke)."""
+    if concrete:
+        return api.init_cache(cfg, batch, max_seq, dtype)
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, batch, max_seq,
+                                                  dtype))
+    return cache

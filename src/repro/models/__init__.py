@@ -1,0 +1,2 @@
+from repro.models.config import ArchConfig
+from repro.models.registry import get_api, ModelAPI

@@ -1,0 +1,296 @@
+"""Shared transformer building blocks (pure-functional JAX).
+
+Conventions:
+- params are plain dicts of jnp arrays; every block has init_* / apply_*.
+- apply_* handles the full-sequence (train/prefill) path; decode_* handles
+  one-token inference against a cache.
+- dtype: computations run in cfg.dtype (bf16 at scale), norms/softmax in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.distributed.sharding import maybe_shard
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _norm_init(d):
+    return jnp.ones((d,), jnp.float32)
+
+
+def _dense_init(key, shape, scale_dim=None, dtype=jnp.bfloat16):
+    scale = (scale_dim or shape[0]) ** -0.5
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    # Variance in f32 for stability, but the normalizing multiply stays in
+    # the input dtype: no f32 (B,S,d) tensor ever reaches HBM (the f32
+    # residual-stream copies were a top HBM-traffic term — EXPERIMENTS.md
+    # §Perf iteration B3).
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    scale = (jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+    return x * scale
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                       # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (full / sliding window), train + decode paths
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, nq * hd), dtype=dtype),
+        "wk": _dense_init(ks[1], (d, nkv * hd), dtype=dtype),
+        "wv": _dense_init(ks[2], (d, nkv * hd), dtype=dtype),
+        "wo": _dense_init(ks[3], (nq * hd, d), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = _norm_init(hd)
+        p["k_norm"] = _norm_init(hd)
+    return p
+
+
+def _qkv(p: Params, cfg: ArchConfig, x: jnp.ndarray, positions):
+    B = x.shape[0]
+    S = x.shape[1]
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, q_per_kv, scores_f32: bool = True):
+    """q: (B,S,Hq,hd), k/v: (B,T,Hkv,hd), mask: (B|1, 1, S, T) bool."""
+    B, S, Hq, hd = q.shape
+    T = k.shape[1]
+    Hkv = k.shape[2]
+    qg = q.reshape(B, S, Hkv, q_per_kv, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) / (hd ** 0.5)
+    if scores_f32:
+        scores = scores.astype(jnp.float32)
+    neg = jnp.asarray(-1e30 if scores_f32 else -3e38, scores.dtype)
+    scores = jnp.where(mask[:, :, None], scores, neg)      # (B,1|k,1,S,T)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, Hq * hd)
+
+
+def causal_mask(S: int, window: int = 0) -> jnp.ndarray:
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    m = j <= i
+    if window:
+        m &= (i - j) < window
+    return m[None, None]   # (1,1,S,S)
+
+
+def apply_attention(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                    window: int = 0, causal: bool = True,
+                    positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, cfg, x, positions)
+    if causal:
+        mask = causal_mask(S, window)
+    else:
+        mask = jnp.ones((1, 1, S, S), bool)
+    out = _sdpa(q, k, v, mask, cfg.q_per_kv, cfg.attn_scores_f32)
+    return out @ p["wo"]
+
+
+def decode_attention(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                     k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     pos: jnp.ndarray, window: int = 0):
+    """One-token decode. x: (B,1,d); caches: (B,T,Hkv,hd); pos: () int32.
+
+    Full attention: T = max_seq, write at index pos, attend to slots <= pos.
+    Sliding window: T = window ring buffer, write at pos % T, attend to
+    valid slots (slot written and within the window).
+    Returns (out (B,1,d), k_cache, v_cache).
+    """
+    B = x.shape[0]
+    T = k_cache.shape[1]
+    q, k, v = _qkv(p, cfg, x, pos[None, None] if pos.ndim == 0 else pos)
+    slot = pos % T if window else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, axis=1)
+    idx = jnp.arange(T)
+    if window:
+        # Slot j holds absolute position: valid iff that position <= pos and
+        # within the last `T` positions (ring semantics).
+        age = (slot - idx) % T          # how long ago slot j was written
+        valid = (idx <= slot) | (pos >= T)
+        mask = valid & (age < T)
+    else:
+        mask = idx <= pos
+    mask = jnp.broadcast_to(mask[None, None, None, :], (B, 1, 1, T))
+    out = _sdpa(q, k_cache.astype(v.dtype), v_cache.astype(v.dtype),
+                mask, cfg.q_per_kv)
+    return out @ p["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs: SwiGLU / squared-ReLU / GELU, dense and MoE (grouped capacity routing)
+# ---------------------------------------------------------------------------
+
+def _gated(cfg: ArchConfig) -> bool:
+    return cfg.activation in ("swiglu", "geglu")
+
+
+def init_mlp(key, cfg: ArchConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    if cfg.n_experts:
+        E = cfg.n_experts
+        p = {"router": _dense_init(ks[3], (d, E), dtype=jnp.float32),
+             "w1": _dense_init(ks[0], (E, d, f), scale_dim=d, dtype=dtype),
+             "w2": _dense_init(ks[1], (E, f, d), scale_dim=f, dtype=dtype)}
+        if _gated(cfg):
+            p["w3"] = _dense_init(ks[2], (E, d, f), scale_dim=d, dtype=dtype)
+        return p
+    p = {"w1": _dense_init(ks[0], (d, f), dtype=dtype),
+         "w2": _dense_init(ks[1], (f, d), dtype=dtype)}
+    if _gated(cfg):
+        p["w3"] = _dense_init(ks[2], (d, f), dtype=dtype)
+    return p
+
+
+def _act(cfg: ArchConfig, a, b=None):
+    if cfg.activation == "swiglu":
+        return jax.nn.silu(a) * b
+    if cfg.activation == "geglu":
+        return jax.nn.gelu(a) * b
+    if cfg.activation == "relu2":
+        r = jax.nn.relu(a)
+        return r * r
+    return jax.nn.gelu(a)
+
+
+def apply_dense_mlp(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    a = x @ p["w1"]
+    b = x @ p["w3"] if _gated(cfg) else None
+    return _act(cfg, a, b) @ p["w2"]
+
+
+def apply_moe(p: Params, cfg: ArchConfig, x: jnp.ndarray, groups: int = 1,
+              capacity_factor: float = 1.25) -> jnp.ndarray:
+    """Grouped capacity-based top-k MoE (DESIGN.md §5).
+
+    Tokens are split into `groups` independent routing groups (one per
+    data-parallel shard at scale, so routing gathers stay device-local under
+    GSPMD). Per group and expert, the top-C tokens by gate weight are
+    gathered, run through the expert densely, and scattered back weighted.
+    FLOPs = groups * E * C * mlp ~= top_k * T * mlp * capacity_factor —
+    i.e. the true active-parameter FLOPs, not the E/top_k-inflated count.
+    Dropped tokens (beyond capacity) fall through with zero MLP output —
+    standard token-dropping semantics.
+    """
+    B, S, d = x.shape
+    E, topk = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = min(groups, T)
+    Tg = T // G
+    xg = maybe_shard(x.reshape(G, Tg, d), "moe_gtd")
+    # Router matmul in activation dtype, THEN upcast: the cotangent toward
+    # xg stays bf16 (upcasting xg itself made every MoE layer's backward
+    # carry f32 (B,S,d) tensors — §Perf iteration B4).
+    logits = (xg @ p["router"].astype(xg.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, topk)           # (G,Tg,topk)
+    top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)
+    # Gate weight per (token, expert): prob if selected else 0.
+    gate = jnp.zeros((G, Tg, E), jnp.float32)
+    gate = jax.vmap(lambda g, i, v: g.at[jnp.arange(Tg)[:, None], i].set(v)
+                    )(gate, top_idx, top_vals)               # (G,Tg,E)
+    C = max(1, int(topk * Tg * capacity_factor / E))
+    sel_vals, sel_idx = jax.lax.top_k(gate.transpose(0, 2, 1), C)  # (G,E,C)
+    xe = jnp.take_along_axis(xg[:, None], sel_idx[..., None], axis=2)
+    xe = maybe_shard(xe, "moe_gecd")
+    a = maybe_shard(jnp.einsum("gecd,edf->gecf", xe, p["w1"]), "moe_gecf")
+    b = (maybe_shard(jnp.einsum("gecd,edf->gecf", xe, p["w3"]), "moe_gecf")
+         if _gated(cfg) else None)
+    h = _act(cfg, a, b)
+    y = maybe_shard(jnp.einsum("gecf,efd->gecd", h, p["w2"]), "moe_gecd")
+    y = y * sel_vals[..., None].astype(y.dtype)
+    # Scatter-add back to token order (vmapped over groups).
+    def scatter(yg, ig):
+        return jnp.zeros((Tg, d), y.dtype).at[ig.reshape(-1)].add(
+            yg.reshape(-1, d))
+    out = jax.vmap(scatter)(y, sel_idx)                      # (G,Tg,d)
+    return out.reshape(B, S, d)
+
+
+def apply_mlp(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+              groups: int = 1) -> jnp.ndarray:
+    if cfg.n_experts:
+        return apply_moe(p, cfg, x, groups)
+    return apply_dense_mlp(p, cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# Standard pre-norm transformer block (attention + MLP)
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ArchConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": _norm_init(cfg.d_model), "attn": init_attention(k1, cfg, dtype),
+            "ln2": _norm_init(cfg.d_model), "mlp": init_mlp(k2, cfg, dtype)}
+
+
+def apply_block(p: Params, cfg: ArchConfig, x: jnp.ndarray, groups: int = 1,
+                window: int = 0, causal: bool = True,
+                positions=None) -> jnp.ndarray:
+    x = x + apply_attention(p["attn"], cfg, rms_norm(x, p["ln1"]),
+                            window=window, causal=causal, positions=positions)
+    x = x + apply_mlp(p["mlp"], cfg, rms_norm(x, p["ln2"]), groups)
+    return x
+
+
+def decode_block(p: Params, cfg: ArchConfig, x: jnp.ndarray, k_cache,
+                 v_cache, pos, groups: int = 1, window: int = 0):
+    a, k_cache, v_cache = decode_attention(p["attn"], cfg,
+                                           rms_norm(x, p["ln1"]),
+                                           k_cache, v_cache, pos, window)
+    x = x + a
+    x = x + apply_mlp(p["mlp"], cfg, rms_norm(x, p["ln2"]), groups)
+    return x, k_cache, v_cache

@@ -1,0 +1,139 @@
+"""Decoder-only LM: dense / MoE / sliding-window / VLM-backbone variants.
+
+Covers mixtral-8x7b, dbrx-132b, phi4-mini, nemotron-4-340b, qwen3-14b,
+command-r-plus-104b and pixtral-12b (whose patch frontend is a stub per the
+assignment: precomputed patch embeddings enter as a prefix).
+
+Layers are weight-stacked and driven by `lax.scan` so HLO size / compile
+time stay flat in depth; the scan body is rematerialized when cfg.remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import layers as L
+from repro.distributed.sharding import maybe_shard
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_lm(key: jax.Array, cfg: ArchConfig, tp: int = 16) -> Dict:
+    V = cfg.vocab_padded(tp)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    dtype = _dtype(cfg)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    stacked = jax.vmap(lambda k: L.init_block(k, cfg, dtype))(layer_keys)
+    return {
+        "embed": L._dense_init(ks[1], (V, d), scale_dim=d, dtype=dtype),
+        "layers": stacked,
+        "ln_f": L._norm_init(d),
+        "unembed": L._dense_init(ks[2], (d, V), dtype=dtype),
+    }
+
+
+def _window(cfg: ArchConfig) -> int:
+    return cfg.window if cfg.attention == "sliding" else 0
+
+
+def forward_lm(params: Dict, cfg: ArchConfig, tokens: jnp.ndarray,
+               groups: int = 1,
+               prefix_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """tokens: (B, S_text) int32; prefix_embeds: (B, S_img, d) (pixtral stub).
+
+    Returns logits (B, S, vocab_padded) in f32.
+    """
+    x = maybe_shard(params["embed"][tokens])         # (B, S_text, d)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    win = _window(cfg)
+
+    def body(x, layer_params):
+        x = L.apply_block(layer_params, cfg, x, groups=groups, window=win)
+        return maybe_shard(x), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["ln_f"])
+    return (x @ params["unembed"]).astype(jnp.float32)
+
+
+def init_cache_lm(cfg: ArchConfig, batch: int, max_seq: int,
+                  dtype=jnp.bfloat16) -> Dict:
+    win = _window(cfg)
+    T = min(max_seq, win) if win else max_seq
+    shape = (cfg.n_layers, batch, T, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill_lm(params: Dict, cfg: ArchConfig, tokens: jnp.ndarray,
+               cache: Dict, groups: int = 1) -> Tuple[jnp.ndarray, Dict]:
+    """Run the full prompt, fill the KV cache, return last-position logits.
+
+    Implemented as the train-mode forward plus cache writes: the lowered
+    HLO is the standard prefill (compute-bound, no decode loop).
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    win = _window(cfg)
+    T = cache["k"].shape[2]
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln1"])
+        positions = jnp.arange(S)[None, :]
+        q, k, v = L._qkv(lp["attn"], cfg, h, positions)
+        mask = L.causal_mask(S, win)
+        attn = L._sdpa(q, k, v, mask, cfg.q_per_kv) @ lp["attn"]["wo"]
+        x = x + attn
+        x = x + L.apply_mlp(lp["mlp"], cfg, L.rms_norm(x, lp["ln2"]), groups)
+        # Cache the last T positions. Ring layout: position p lives at slot
+        # p % T, so decode_attention's ring arithmetic continues seamlessly.
+        if win and S > T:
+            k_keep, v_keep = k[:, -T:], v[:, -T:]
+            kc = jnp.roll(k_keep, S % T, axis=1)
+            vc = jnp.roll(v_keep, S % T, axis=1)
+        else:
+            kc = jnp.zeros((B, T, cfg.n_kv_heads, cfg.head_dim), k.dtype)
+            vc = jnp.zeros_like(kc)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, 0, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, 0, axis=1)
+        return x, (kc, vc)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (kc, vc) = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["ln_f"])
+    logits = (x[:, -1] @ params["unembed"]).astype(jnp.float32)
+    new_cache = {"k": kc.astype(cache["k"].dtype),
+                 "v": vc.astype(cache["v"].dtype),
+                 "pos": jnp.asarray(S, jnp.int32)}
+    return logits, new_cache
+
+
+def decode_lm(params: Dict, cfg: ArchConfig, tokens: jnp.ndarray,
+              cache: Dict, groups: int = 1) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step. tokens: (B,) int32. Returns (logits (B, V), cache)."""
+    x = params["embed"][tokens][:, None, :]          # (B,1,d)
+    win = _window(cfg)
+    pos = cache["pos"]
+
+    def body(x, xs):
+        lp, kc, vc = xs
+        x, kc, vc = L.decode_block(lp, cfg, x, kc, vc, pos, groups=groups,
+                                   window=win)
+        return x, (kc, vc)
+
+    x, (kc, vc) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"]))
+    x = L.rms_norm(x, params["ln_f"])
+    logits = (x[:, 0] @ params["unembed"]).astype(jnp.float32)
+    return logits, {"k": kc, "v": vc, "pos": pos + 1}

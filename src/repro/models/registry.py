@@ -1,0 +1,93 @@
+"""Uniform model API over the 10 assigned architectures."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import lm, rglru, rwkv6, whisper
+
+
+class ModelAPI(NamedTuple):
+    init: Callable          # (key, cfg, tp) -> params
+    forward: Callable       # (params, cfg, batch, groups) -> logits (B,S,V)
+    init_cache: Callable    # (cfg, batch, max_seq, dtype) -> cache
+    prefill: Callable       # (params, cfg, batch, cache, groups) -> (logits, cache)
+    decode: Callable        # (params, cfg, tokens, cache, groups) -> (logits, cache)
+    has_decode: bool = True
+
+
+def _lm_api() -> ModelAPI:
+    return ModelAPI(
+        init=lm.init_lm,
+        forward=lambda p, c, b, g: lm.forward_lm(p, c, b["tokens"], g),
+        init_cache=lm.init_cache_lm,
+        prefill=lambda p, c, b, cache, g: lm.prefill_lm(p, c, b["tokens"],
+                                                        cache, g),
+        decode=lm.decode_lm,
+    )
+
+
+def _vlm_api() -> ModelAPI:
+    return ModelAPI(
+        init=lm.init_lm,
+        forward=lambda p, c, b, g: lm.forward_lm(
+            p, c, b["tokens"], g, prefix_embeds=b.get("patches")),
+        init_cache=lm.init_cache_lm,
+        # Serving prefill/decode operate on the text stream (vision prefix
+        # enters as embeddings during prefill in a full deployment; the
+        # assigned decode cells are text-decode against the KV cache).
+        prefill=lambda p, c, b, cache, g: lm.prefill_lm(p, c, b["tokens"],
+                                                        cache, g),
+        decode=lm.decode_lm,
+    )
+
+
+def _rg_api() -> ModelAPI:
+    return ModelAPI(
+        init=rglru.init_rg,
+        forward=lambda p, c, b, g: rglru.forward_rg(p, c, b["tokens"], g),
+        init_cache=rglru.init_cache_rg,
+        prefill=lambda p, c, b, cache, g: rglru.prefill_rg(p, c, b["tokens"],
+                                                           cache, g),
+        decode=rglru.decode_rg,
+    )
+
+
+def _rwkv_api() -> ModelAPI:
+    return ModelAPI(
+        init=rwkv6.init_rwkv,
+        forward=lambda p, c, b, g: rwkv6.forward_rwkv(p, c, b["tokens"], g),
+        init_cache=rwkv6.init_cache_rwkv,
+        prefill=lambda p, c, b, cache, g: rwkv6.prefill_rwkv(
+            p, c, b["tokens"], cache, g),
+        decode=rwkv6.decode_rwkv,
+    )
+
+
+def _whisper_api() -> ModelAPI:
+    return ModelAPI(
+        init=whisper.init_whisper,
+        forward=lambda p, c, b, g: whisper.forward_whisper(
+            p, c, b["tokens"], b["frames"], g),
+        init_cache=whisper.init_cache_whisper,
+        prefill=lambda p, c, b, cache, g: whisper.prefill_whisper(
+            p, c, b["tokens"], b["frames"], cache, g),
+        decode=whisper.decode_whisper,
+    )
+
+
+_FAMILIES = {
+    "dense": _lm_api,
+    "moe": _lm_api,
+    "vlm": _vlm_api,
+    "hybrid": _rg_api,
+    "ssm": _rwkv_api,
+    "encdec": _whisper_api,
+}
+
+
+def get_api(cfg: ArchConfig) -> ModelAPI:
+    return _FAMILIES[cfg.family]()

@@ -1,0 +1,286 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + local attention.
+
+[arXiv:2402.19427] Griffin/RecurrentGemma: repeating pattern of two
+residual RG-LRU blocks followed by one local(sliding-window) MQA block.
+The RG-LRU recurrence
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+    log a_t = -c * softplus(Lambda) * r_t            (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+is a diagonal linear RNN -> computed with `jax.lax.associative_scan`
+(log-depth, parallel over time) in train/prefill, O(1) state in decode.
+Train-time seq shapes stay (B, S, d_rnn); the scan is over S.
+
+Layer stacking: the repeating (R, R, A) super-block is weight-stacked and
+scanned; the remainder layers (26 % 3) run unstacked after the scan, so the
+exact 26-layer pattern from the paper is preserved.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import layers as L
+from repro.distributed.sharding import maybe_shard
+
+_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block
+# ---------------------------------------------------------------------------
+
+def init_rglru_block(key, cfg: ArchConfig, dtype) -> Dict:
+    d = cfg.d_model
+    dr = d                      # lru width == d_model for recurrentgemma-2b
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": L._norm_init(d),
+        "w_in": L._dense_init(ks[0], (d, dr), dtype=dtype),      # x branch
+        "w_gate": L._dense_init(ks[1], (d, dr), dtype=dtype),    # gelu gate
+        "conv_w": L._dense_init(ks[2], (4, dr), scale_dim=4, dtype=dtype),
+        "w_a": L._dense_init(ks[3], (dr, dr), dtype=dtype),      # recur gate
+        "w_x": L._dense_init(ks[4], (dr, dr), dtype=dtype),      # input gate
+        "lam": jnp.asarray(
+            jax.random.uniform(ks[5], (dr,), jnp.float32, 0.0, 1.0)),
+        "w_out": L._dense_init(ks[6], (dr, d), dtype=dtype),
+        "ln2": L._norm_init(d),
+        "mlp": L.init_mlp(ks[7], cfg, dtype),
+    }
+
+
+def _rglru_scan(a_log: jnp.ndarray, bx: jnp.ndarray,
+                h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """h_t = exp(a_log_t) * h_{t-1} + bx_t over axis 1 (time).
+
+    a_log, bx: (B, S, dr). Associative scan over the diagonal recurrence in
+    (log-decay, value) form; returns h (B, S, dr). h0 folded into bx[0].
+    """
+    if h0 is not None:
+        bx = bx.at[:, 0].add(jnp.exp(a_log[:, 0]) * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a_log, bx), axis=1)
+    return h
+
+
+def _causal_conv4(x: jnp.ndarray, w: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, width 4. x: (B,S,dr), w: (4,dr).
+
+    Returns (y, new_state) where state is the last 3 inputs (B,3,dr).
+    """
+    B, S, dr = x.shape
+    pad = state if state is not None else jnp.zeros((B, 3, dr), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+3, dr)
+    y = sum(xp[:, i:i + S] * w[i][None, None] for i in range(4))
+    return y, xp[:, -3:]
+
+
+def _rglru_core(p: Dict, x: jnp.ndarray, h0=None, conv0=None):
+    """Shared train/decode core. x: (B,S,d) normed input; returns
+    (branch_out (B,S,dr), h_last, conv_state)."""
+    u = x @ p["w_in"]                                  # (B,S,dr)
+    u, conv_state = _causal_conv4(u, p["conv_w"], conv0)
+    r = jax.nn.sigmoid((u @ p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["w_x"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r        # (B,S,dr) f32, < 0
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    bx = beta * (i * u.astype(jnp.float32))
+    h = _rglru_scan(log_a, bx, h0)                     # (B,S,dr) f32
+    return h.astype(x.dtype), h[:, -1], conv_state
+
+
+def apply_rglru_block(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
+                      groups: int = 1) -> jnp.ndarray:
+    xin = L.rms_norm(x, p["ln"])
+    h, _, _ = _rglru_core(p, xin)
+    gate = jax.nn.gelu((xin @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    x = x + (h * gate) @ p["w_out"]
+    x = x + L.apply_mlp(p["mlp"], cfg, L.rms_norm(x, p["ln2"]), groups)
+    return x
+
+
+def decode_rglru_block(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
+                       h0: jnp.ndarray, conv0: jnp.ndarray,
+                       groups: int = 1):
+    """x: (B,1,d); h0: (B,dr) f32; conv0: (B,3,dr). Returns (x, h, conv)."""
+    xin = L.rms_norm(x, p["ln"])
+    h, h_last, conv_state = _rglru_core(p, xin, h0, conv0)
+    gate = jax.nn.gelu((xin @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    x = x + (h * gate) @ p["w_out"]
+    x = x + L.apply_mlp(p["mlp"], cfg, L.rms_norm(x, p["ln2"]), groups)
+    return x, h_last, conv_state
+
+
+# ---------------------------------------------------------------------------
+# Full model: embed -> scan[(R,R,A) x 8] -> (R,R) -> norm -> unembed
+# ---------------------------------------------------------------------------
+
+def _superblocks(cfg: ArchConfig) -> Tuple[int, Tuple[str, ...]]:
+    pat = cfg.layer_pattern or ("R", "R", "A")
+    n_super = cfg.n_layers // len(pat)
+    rem = cfg._pattern()[n_super * len(pat):]
+    return n_super, rem
+
+
+def init_rg(key: jax.Array, cfg: ArchConfig, tp: int = 16) -> Dict:
+    V = cfg.vocab_padded(tp)
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.param_dtype)
+    pat = cfg.layer_pattern or ("R", "R", "A")
+    n_super, rem = _superblocks(cfg)
+    ks = jax.random.split(key, 4 + len(rem))
+
+    def init_super(k):
+        kk = jax.random.split(k, len(pat))
+        return {
+            f"{i}_{c}": (init_rglru_block(kk[i], cfg, dtype) if c == "R"
+                         else L.init_block(kk[i], cfg, dtype))
+            for i, c in enumerate(pat)
+        }
+
+    stacked = jax.vmap(init_super)(jax.random.split(ks[0], n_super))
+    rem_params = [init_rglru_block(ks[4 + i], cfg, dtype) if c == "R"
+                  else L.init_block(ks[4 + i], cfg, dtype)
+                  for i, c in enumerate(rem)]
+    return {"embed": L._dense_init(ks[1], (V, d), scale_dim=d, dtype=dtype),
+            "supers": stacked, "rem": rem_params,
+            "ln_f": L._norm_init(d),
+            "unembed": L._dense_init(ks[2], (d, V), dtype=dtype)}
+
+
+def forward_rg(params: Dict, cfg: ArchConfig, tokens: jnp.ndarray,
+               groups: int = 1) -> jnp.ndarray:
+    x = maybe_shard(params["embed"][tokens])
+    pat = cfg.layer_pattern or ("R", "R", "A")
+
+    def body(x, sp):
+        for i, c in enumerate(pat):
+            p = sp[f"{i}_{c}"]
+            if c == "R":
+                x = apply_rglru_block(p, cfg, x, groups)
+            else:
+                x = L.apply_block(p, cfg, x, groups=groups,
+                                  window=cfg.window)
+        return maybe_shard(x), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["supers"])
+    _, rem_pattern = _superblocks(cfg)
+    for c, p in zip(rem_pattern, params["rem"]):
+        if c == "R":
+            x = apply_rglru_block(p, cfg, x, groups)
+        else:
+            x = L.apply_block(p, cfg, x, groups=groups, window=cfg.window)
+    x = L.rms_norm(x, params["ln_f"])
+    return (x @ params["unembed"]).astype(jnp.float32)
+
+
+def _layer_list(params: Dict, cfg: ArchConfig):
+    """Yield (kind, params) for all n_layers in order (decode path —
+    python loop, no scan: per-layer states are heterogeneous)."""
+    pat = cfg.layer_pattern or ("R", "R", "A")
+    n_super, _ = _superblocks(cfg)
+    for s in range(n_super):
+        for i, c in enumerate(pat):
+            p = jax.tree.map(lambda a: a[s], params["supers"][f"{i}_{c}"])
+            yield c, p
+    _, rem_pattern = _superblocks(cfg)
+    for c, p in zip(rem_pattern, params["rem"]):
+        yield c, p
+
+
+def init_cache_rg(cfg: ArchConfig, batch: int, max_seq: int,
+                  dtype=jnp.bfloat16) -> Dict:
+    d = cfg.d_model
+    pat = cfg._pattern()
+    n_r = sum(1 for c in pat if c == "R")
+    n_a = len(pat) - n_r
+    T = min(max_seq, cfg.window)
+    return {
+        "h": jnp.zeros((n_r, batch, d), jnp.float32),
+        "conv": jnp.zeros((n_r, batch, 3, d), dtype),
+        "k": jnp.zeros((n_a, batch, T, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((n_a, batch, T, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill_rg(params: Dict, cfg: ArchConfig, tokens: jnp.ndarray,
+               cache: Dict, groups: int = 1):
+    """Run the prompt, return (last logits, per-layer states + ring KV)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    T = cache["k"].shape[2]
+    h_all, conv_all = cache["h"], cache["conv"]
+    k_all, v_all = cache["k"], cache["v"]
+    ri, ai = 0, 0
+    for kind, p in _layer_list(params, cfg):
+        if kind == "R":
+            xin = L.rms_norm(x, p["ln"])
+            h, h_last, conv_state = _rglru_core(p, xin)
+            gate = jax.nn.gelu((xin @ p["w_gate"]).astype(jnp.float32)
+                               ).astype(x.dtype)
+            x = x + (h * gate) @ p["w_out"]
+            x = x + L.apply_mlp(p["mlp"], cfg, L.rms_norm(x, p["ln2"]),
+                                groups)
+            h_all = h_all.at[ri].set(h_last)
+            conv_all = conv_all.at[ri].set(conv_state.astype(conv_all.dtype))
+            ri += 1
+        else:
+            h = L.rms_norm(x, p["ln1"])
+            q, k, v = L._qkv(p["attn"], cfg, h, jnp.arange(S)[None, :])
+            attn = L._sdpa(q, k, v, L.causal_mask(S, cfg.window),
+                           cfg.q_per_kv) @ p["attn"]["wo"]
+            x = x + attn
+            x = x + L.apply_mlp(p["mlp"], cfg, L.rms_norm(x, p["ln2"]),
+                                groups)
+            if S > T:     # ring layout: position p -> slot p % T
+                kc = jnp.roll(k[:, -T:], S % T, axis=1)
+                vc = jnp.roll(v[:, -T:], S % T, axis=1)
+            else:
+                kc = jnp.zeros((B, T, cfg.n_kv_heads, cfg.head_dim), k.dtype)
+                vc = jnp.zeros_like(kc)
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, k, 0, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, v, 0, axis=1)
+            k_all = k_all.at[ai].set(kc.astype(k_all.dtype))
+            v_all = v_all.at[ai].set(vc.astype(v_all.dtype))
+            ai += 1
+    x = L.rms_norm(x, params["ln_f"])
+    logits = (x[:, -1] @ params["unembed"]).astype(jnp.float32)
+    return logits, {"h": h_all, "conv": conv_all, "k": k_all, "v": v_all,
+                    "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_rg(params: Dict, cfg: ArchConfig, tokens: jnp.ndarray,
+              cache: Dict, groups: int = 1):
+    x = params["embed"][tokens][:, None, :]
+    pos = cache["pos"]
+    h_all, conv_all = cache["h"], cache["conv"]
+    k_all, v_all = cache["k"], cache["v"]
+    ri, ai = 0, 0
+    for kind, p in _layer_list(params, cfg):
+        if kind == "R":
+            x, h, conv = decode_rglru_block(p, cfg, x, h_all[ri],
+                                            conv_all[ri], groups)
+            h_all = h_all.at[ri].set(h)
+            conv_all = conv_all.at[ri].set(conv)
+            ri += 1
+        else:
+            x, kc, vc = L.decode_block(p, cfg, x, k_all[ai], v_all[ai], pos,
+                                       groups=groups, window=cfg.window)
+            k_all = k_all.at[ai].set(kc)
+            v_all = v_all.at[ai].set(vc)
+            ai += 1
+    x = L.rms_norm(x, params["ln_f"])
+    logits = (x[:, 0] @ params["unembed"]).astype(jnp.float32)
+    return logits, {"h": h_all, "conv": conv_all, "k": k_all, "v": v_all,
+                    "pos": pos + 1}

@@ -1,0 +1,3 @@
+from repro.train.optimizer import adamw_init, adamw_update, AdamWConfig
+from repro.train.steps import (make_train_step, make_prefill_step,
+                               make_decode_step, cross_entropy, TrainState)

@@ -1,0 +1,64 @@
+"""AdamW, implemented from scratch (no optax dependency).
+
+Moment dtype is configurable (cfg.optimizer_dtype): fp32 by default, bf16
+for the 100B+ configs so fully-sharded optimizer state fits 16 GB/chip
+(DESIGN.md §5). Moments inherit the sharding of their parameters (same
+pytree structure -> same PartitionSpecs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"
+
+
+def adamw_init(params, cfg: AdamWConfig) -> Dict:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, opt_state: Dict, cfg: AdamWConfig
+                 ) -> Tuple[Any, Dict]:
+    step = opt_state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    dt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:     # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype)
+        return new_p, m32.astype(dt), v32.astype(dt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}

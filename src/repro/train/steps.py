@@ -1,0 +1,127 @@
+"""Train / prefill / decode step builders shared by launcher + dry-run.
+
+make_train_step builds a pure (state, batch) -> (state, metrics) function:
+  - microbatch gradient accumulation via lax.scan (cfg.microbatches),
+  - f32 loss with label masking (-1 = ignore),
+  - AdamW update (moments stay sharded like params),
+  - optional sketched-gradient compression hook (distributed/compression.py)
+    applied to the accumulated gradient before the optimizer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.registry import ModelAPI
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Dict
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Masked mean CE. logits (B,S,V) f32, labels (B,S) int32 (-1 ignored)."""
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def init_train_state(key: jax.Array, cfg: ArchConfig, api: ModelAPI,
+                     tp: int = 16) -> TrainState:
+    params = api.init(key, cfg, tp)
+    opt_cfg = AdamWConfig(moment_dtype=cfg.optimizer_dtype)
+    return TrainState(params=params, opt=adamw_init(params, opt_cfg))
+
+
+def make_train_step(cfg: ArchConfig, api: ModelAPI, groups: int = 1,
+                    grad_transform: Optional[Callable] = None,
+                    opt_cfg: Optional[AdamWConfig] = None,
+                    pregather_spec: Optional[Any] = None,
+                    grad_spec: Optional[Any] = None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch: dict of (B, ...) arrays; B must divide by cfg.microbatches.
+    grad_transform: optional (grads -> grads) hook, e.g. the SRHT sketched
+    all-reduce with error feedback from distributed/compression.py.
+    pregather_spec: PartitionSpec pytree WITHOUT the FSDP factor. When set,
+    params are constrained to it once at step entry, so the ZeRO-3 weight
+    all-gather happens once per step instead of once per microbatch; grads
+    are reduce-scattered back to the sharded optimizer state by GSPMD.
+    """
+    opt_cfg = opt_cfg or AdamWConfig(moment_dtype=cfg.optimizer_dtype)
+    M = cfg.microbatches
+
+    def loss_fn(params, mb):
+        logits = api.forward(params, cfg, mb, groups)
+        return cross_entropy(logits, mb["labels"])
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if pregather_spec is not None:
+            state = TrainState(
+                params=jax.lax.with_sharding_constraint(state.params,
+                                                        pregather_spec),
+                opt=state.opt)
+        if M > 1:
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape(M, x.shape[0] // M, *x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                loss, grads = jax.value_and_grad(loss_fn)(state.params, mb)
+                if grad_spec is not None:
+                    # Land per-microbatch grads in the fully-sharded layout
+                    # of the optimizer moments: the cross-data reduction
+                    # lowers to reduce-scatter instead of all-reduce (half
+                    # the bytes), and the f32 accumulator is 2D-sharded.
+                    grads = jax.lax.with_sharding_constraint(grads,
+                                                             grad_spec)
+                return (carry[0] + loss,
+                        jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                     carry[1], grads)), None
+
+            zero_like = (jax.lax.with_sharding_constraint(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             state.params), grad_spec)
+                if grad_spec is not None else
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             state.params))
+            zero = (jnp.zeros(()), zero_like)
+            (loss_sum, grads), _ = jax.lax.scan(acc, zero, mb_batch)
+            loss = loss_sum / M
+            grads = jax.tree.map(lambda g: g / M, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt = adamw_update(state.params, grads, state.opt,
+                                           opt_cfg)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return TrainState(new_params, new_opt), {"loss": loss,
+                                                 "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, api: ModelAPI,
+                      groups: int = 1) -> Callable:
+    def prefill_step(params, batch, cache):
+        return api.prefill(params, cfg, batch, cache, groups)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, api: ModelAPI,
+                     groups: int = 1) -> Callable:
+    def decode_step(params, tokens, cache):
+        logits, cache = api.decode(params, cfg, tokens, cache, groups)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, logits, cache
+    return decode_step

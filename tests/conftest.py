@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device; only launch/dryrun.py forces 512
+# host devices (and is exercised via subprocess in tests to keep isolation).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

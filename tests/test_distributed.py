@@ -1,0 +1,20 @@
+"""Runs the multi-device checks (8 fake host devices) in a subprocess —
+jax locks device count at first init, so this cannot share the pytest
+process."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+
+def test_distributed_checks():
+    root = pathlib.Path(__file__).resolve().parent.parent
+    r = subprocess.run(
+        [sys.executable, str(root / "tests" / "dist_checks.py")],
+        capture_output=True, text=True, timeout=1200,
+        env={"PYTHONPATH": str(root / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "ALL DIST CHECKS PASSED" in r.stdout

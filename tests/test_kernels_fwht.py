@@ -1,0 +1,49 @@
+"""Shape/dtype sweep: FWHT Pallas kernel vs pure-jnp oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import fwht_pallas
+from repro.kernels.fwht.ref import fwht_ref
+
+
+@pytest.mark.parametrize("n", [8, 64, 512, 4096, 1 << 13, 1 << 14, 1 << 15])
+@pytest.mark.parametrize("c", [1, 3, 128, 200])
+def test_fwht_matches_ref(n, c):
+    if n >= (1 << 14) and c > 3:
+        pytest.skip("large-n sweep kept small for CI time")
+    x = jax.random.normal(jax.random.PRNGKey(n + c), (n, c), jnp.float32)
+    got = np.asarray(fwht_pallas(x, interpret=True))
+    want = np.asarray(fwht_ref(x))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwht_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 16)).astype(dtype)
+    got = np.asarray(fwht_pallas(x, interpret=True), np.float32)
+    want = np.asarray(fwht_ref(x), np.float32)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_fwht_unnormalized():
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 4))
+    got = np.asarray(fwht_pallas(x, normalize=False, interpret=True))
+    want = np.asarray(fwht_ref(x, normalize=False))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fwht_two_level_equals_one_level():
+    """The H_a (x) H_b factorization must agree with single-level exactly."""
+    from repro.kernels.fwht import ops
+    x = jax.random.normal(jax.random.PRNGKey(2), (1 << 14, 2))
+    got = np.asarray(fwht_pallas(x, interpret=True))
+    want = np.asarray(fwht_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fwht_rejects_bad_n():
+    with pytest.raises(ValueError):
+        fwht_pallas(jnp.zeros((12, 2)), interpret=True)

@@ -1,0 +1,50 @@
+"""Unit tests for the JAX Lloyd / k-means++ implementation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kmeans, kmeans_plus_plus, clustering_accuracy
+from repro.data import gaussian_blobs
+
+
+def test_separated_blobs_recovered():
+    X, labels = gaussian_blobs(jax.random.PRNGKey(0), n=600, p=5, k=4,
+                               spread=0.05, center_scale=3.0)
+    res = kmeans(jax.random.PRNGKey(1), X.T, 4)
+    assert clustering_accuracy(labels, res.labels, 4) > 0.99
+
+
+def test_objective_decreases_vs_random_assignment():
+    X, _ = gaussian_blobs(jax.random.PRNGKey(0), n=300, p=4, k=3)
+    Y = X.T
+    res = kmeans(jax.random.PRNGKey(1), Y, 3)
+    # Random centroids objective:
+    C0 = Y[:3]
+    d2 = jnp.sum((Y[:, None, :] - C0[None]) ** 2, axis=-1)
+    rand_obj = float(jnp.sum(jnp.min(d2, axis=1)))
+    assert float(res.objective) <= rand_obj
+
+
+def test_kmeanspp_centroids_are_data_points():
+    X, _ = gaussian_blobs(jax.random.PRNGKey(0), n=100, p=3, k=5)
+    C = kmeans_plus_plus(jax.random.PRNGKey(1), X.T, 5)
+    Y = np.asarray(X.T)
+    for c in np.asarray(C):
+        assert np.min(np.sum((Y - c) ** 2, axis=1)) < 1e-10
+
+
+def test_restarts_never_hurt():
+    X, _ = gaussian_blobs(jax.random.PRNGKey(3), n=200, p=2, k=6, spread=0.3)
+    obj1 = float(kmeans(jax.random.PRNGKey(4), X.T, 6, n_restarts=1).objective)
+    obj10 = float(kmeans(jax.random.PRNGKey(4), X.T, 6, n_restarts=10).objective)
+    assert obj10 <= obj1 + 1e-6
+
+
+def test_labels_shape_dtype_and_range():
+    X, _ = gaussian_blobs(jax.random.PRNGKey(5), n=50, p=2, k=3)
+    res = kmeans(jax.random.PRNGKey(6), X.T, 3)
+    assert res.labels.shape == (50,)
+    assert res.labels.dtype == jnp.int32
+    assert int(res.labels.min()) >= 0 and int(res.labels.max()) < 3
+    assert np.isfinite(float(res.objective))

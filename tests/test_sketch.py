@@ -1,0 +1,116 @@
+"""Unit tests for the SRHT / one-pass randomized eigendecomposition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (fwht, make_srht, srht_apply, srht_apply_t, next_pow2,
+                        randomized_eig, sketch_stream, polynomial_kernel,
+                        rbf_kernel, gram_matrix, exact_eig_from_gram)
+from repro.core.sketch import make_gaussian, one_pass_core
+from repro.data import gaussian_blobs
+
+
+def hadamard_dense(n):
+    H = np.array([[1.0]])
+    while H.shape[0] < n:
+        H = np.block([[H, H], [H, -H]])
+    return H
+
+
+@pytest.mark.parametrize("n", [1, 2, 8, 64, 256])
+def test_fwht_matches_dense_hadamard(n):
+    rng = np.random.RandomState(0)
+    x = rng.randn(n, 3).astype(np.float32)
+    want = hadamard_dense(n) @ x / np.sqrt(n)
+    got = np.asarray(fwht(jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_fwht_is_orthonormal_involution():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 5))
+    np.testing.assert_allclose(np.asarray(fwht(fwht(x))), np.asarray(x),
+                               rtol=1e-5, atol=1e-5)
+    # Orthonormal: preserves norms.
+    np.testing.assert_allclose(float(jnp.linalg.norm(fwht(x))),
+                               float(jnp.linalg.norm(x)), rtol=1e-5)
+
+
+def test_fwht_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        fwht(jnp.zeros((3, 2)))
+
+
+@pytest.mark.parametrize("n,rp", [(100, 12), (128, 7), (777, 32)])
+def test_srht_apply_consistency(n, rp):
+    """srht_apply_t and srht_apply agree with a densified Omega."""
+    srht = make_srht(jax.random.PRNGKey(1), n, rp)
+    # Densify Omega = D H R restricted to first n rows.
+    n_pad = srht.n_pad
+    H = hadamard_dense(n_pad) / np.sqrt(n_pad)
+    D = np.diag(np.asarray(srht.signs))
+    R = np.zeros((n_pad, rp))
+    R[np.asarray(srht.rows), np.arange(rp)] = 1.0
+    omega = (D @ H @ R)[:n]
+    M = np.random.RandomState(2).randn(n, 4).astype(np.float32)
+    got_t = np.asarray(srht_apply_t(srht, jnp.asarray(M)))
+    np.testing.assert_allclose(got_t, omega.T @ M, rtol=1e-3, atol=1e-4)
+    V = np.random.RandomState(3).randn(rp, 4).astype(np.float32)
+    got = np.asarray(srht_apply(srht, jnp.asarray(V)))
+    np.testing.assert_allclose(got, omega @ V, rtol=1e-3, atol=1e-4)
+
+
+def test_srht_rows_sampled_without_replacement():
+    srht = make_srht(jax.random.PRNGKey(0), 200, 64)
+    rows = np.asarray(srht.rows)
+    assert len(np.unique(rows)) == 64
+    assert next_pow2(200) == 256
+    assert rows.max() < 256
+
+
+@pytest.mark.parametrize("sketch_type", ["srht", "gaussian"])
+def test_randomized_eig_recovers_lowrank_gram(sketch_type):
+    """On an exactly rank-deficient K, the one-pass method is near-exact."""
+    X, _ = gaussian_blobs(jax.random.PRNGKey(0), n=300, p=4, k=3)
+    kern = polynomial_kernel(degree=2)          # rank <= 10 feature space
+    K = gram_matrix(kern, X)
+    r = 10
+    eig = randomized_eig(jax.random.PRNGKey(1), kern, X, r=r, oversampling=10,
+                         block=64, sketch_type=sketch_type)
+    err = float(jnp.linalg.norm(K - eig.Y.T @ eig.Y) / jnp.linalg.norm(K))
+    assert err < 1e-3, err
+
+
+def test_randomized_eig_close_to_optimal_rank_r():
+    """General (full-rank) RBF gram: error within a modest factor of optimal."""
+    X, _ = gaussian_blobs(jax.random.PRNGKey(0), n=400, p=6, k=4, spread=0.3)
+    kern = rbf_kernel(gamma=0.5)
+    K = gram_matrix(kern, X)
+    r = 8
+    best = exact_eig_from_gram(K, r)
+    opt = float(jnp.linalg.norm(K - best.Y.T @ best.Y))
+    eig = randomized_eig(jax.random.PRNGKey(7), kern, X, r=r, oversampling=10,
+                         block=128)
+    got = float(jnp.linalg.norm(K - eig.Y.T @ eig.Y))
+    assert got < 2.5 * opt + 1e-6, (got, opt)
+
+
+def test_sketch_stream_matches_dense_product():
+    """Streaming W == K @ Omega computed densely, for awkward n/block."""
+    X, _ = gaussian_blobs(jax.random.PRNGKey(0), n=173, p=5, k=2)
+    kern = rbf_kernel(gamma=1.0)
+    K = gram_matrix(kern, X)
+    srht = make_srht(jax.random.PRNGKey(1), 173, 9)
+    W = sketch_stream(kern, X, srht, block=64)
+    # Dense Omega via srht_apply on identity.
+    omega = np.asarray(srht_apply(srht, jnp.eye(9)))
+    np.testing.assert_allclose(np.asarray(W), np.asarray(K) @ omega,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_eigvals_nonnegative_descending():
+    X, _ = gaussian_blobs(jax.random.PRNGKey(2), n=128, p=3, k=2)
+    eig = randomized_eig(jax.random.PRNGKey(3), rbf_kernel(gamma=1.0), X, r=5)
+    ev = np.asarray(eig.eigvals)
+    assert (ev >= 0).all()
+    assert (np.diff(ev) <= 1e-5).all()

@@ -1,0 +1,95 @@
+"""Property-based validation of Theorem 1 (hypothesis).
+
+For random small PSD kernel matrices and rank-r truncations we check, by
+brute-force optimal clustering:
+    L(C_hat) - L(C_star) <= tr(E)       (best rank-r approximation)
+    L(C_hat) - L(C_star) <= 2 ||E||_*   (any PSD approximation)
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - hypothesis is installed
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (objective_from_labels, brute_force_optimal,
+                        theorem1_bounds, best_rank_r, trace_norm)
+
+
+def random_psd(rng, n, rank):
+    A = rng.randn(n, rank)
+    return (A @ A.T).astype(np.float32)
+
+
+def _check(seed, n, k, r, rank):
+    rng = np.random.RandomState(seed)
+    K = random_psd(rng, n, rank)
+    K_hat = np.asarray(best_rank_r(jnp.asarray(K), r))
+    excess, bound_any, bound_best = theorem1_bounds(
+        jnp.asarray(K), jnp.asarray(K_hat), k)
+    tol = 1e-3 * max(1.0, abs(bound_best))
+    assert excess <= bound_best + tol, (excess, bound_best)
+    assert excess <= bound_any + tol, (excess, bound_any)
+    assert excess >= -1e-3  # C_star is optimal under true K
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), n=st.integers(4, 7),
+           k=st.integers(2, 3), r=st.integers(1, 3), rank=st.integers(2, 5))
+    def test_theorem1_best_rank_r_hypothesis(seed, n, k, r, rank):
+        _check(seed, n, k, r, rank)
+else:                        # pragma: no cover
+    @pytest.mark.parametrize("seed", range(20))
+    def test_theorem1_best_rank_r_sweep(seed):
+        _check(seed, n=6, k=2, r=2, rank=4)
+
+
+def test_theorem1_general_psd_approximation():
+    """K_hat not the best rank-r (a Nystrom-flavoured one): only the
+    2||E||_* bound is claimed; verify it."""
+    rng = np.random.RandomState(0)
+    for seed in range(10):
+        rng = np.random.RandomState(seed)
+        K = random_psd(rng, 6, 4)
+        idx = rng.choice(6, 3, replace=False)
+        C = K[:, idx]
+        W = K[np.ix_(idx, idx)]
+        K_hat = (C @ np.linalg.pinv(W) @ C.T).astype(np.float32)
+        excess, bound_any, _ = theorem1_bounds(jnp.asarray(K),
+                                               jnp.asarray(K_hat), 2)
+        assert excess <= bound_any + 1e-3 * max(1.0, bound_any)
+
+
+def test_objective_matches_definition():
+    """L from labels == ||Phi - Phi C^T C||_F^2 computed explicitly, using a
+    linear kernel where Phi = X."""
+    rng = np.random.RandomState(1)
+    X = rng.randn(3, 8).astype(np.float32)
+    K = X.T @ X
+    labels = np.array([0, 1, 0, 1, 1, 0, 1, 0], np.int32)
+    got = float(objective_from_labels(jnp.asarray(K), jnp.asarray(labels), 2))
+    # Explicit: sum_i ||x_i - mu_{c(i)}||^2
+    want = 0.0
+    for c in range(2):
+        pts = X[:, labels == c]
+        mu = pts.mean(axis=1, keepdims=True)
+        want += float(((pts - mu) ** 2).sum())
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_brute_force_is_minimum():
+    rng = np.random.RandomState(2)
+    K = random_psd(rng, 6, 3)
+    labels, obj = brute_force_optimal(K, 2)
+    # Any random labeling is no better.
+    for seed in range(20):
+        lab = np.random.RandomState(seed).randint(0, 2, 6)
+        if len(set(lab)) < 2:
+            continue
+        other = float(objective_from_labels(jnp.asarray(K),
+                                            jnp.asarray(lab, np.int32), 2))
+        assert obj <= other + 1e-5
