@@ -1,0 +1,48 @@
+"""Serving throughput benchmark -> BENCH_serve.json.
+
+Fits a model on synthetic blob+ring data, then measures bucketed
+assignments/sec through repro.serve.bench at several query batch sizes.
+
+  PYTHONPATH=src python benchmarks/bench_serve.py
+  PYTHONPATH=src python benchmarks/bench_serve.py --n 8000 \
+      --batch-sizes 64,512,4096 --out BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2000)
+    ap.add_argument("--r", type=int, default=2)
+    ap.add_argument("--k", type=int, default=2)
+    ap.add_argument("--l", type=int, default=10)
+    ap.add_argument("--block", type=int, default=512)
+    ap.add_argument("--batch-sizes", default="64,512")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.data import blob_ring
+    from repro.serve import benchmark_assign, fit_model, write_bench
+
+    key = jax.random.PRNGKey(args.seed)
+    X, _ = blob_ring(key, n=args.n)
+    model = fit_model(jax.random.PRNGKey(args.seed + 1), X, k=args.k,
+                      r=args.r, oversampling=args.l, block=args.block)
+    bench = benchmark_assign(
+        model, batch_sizes=[int(b) for b in args.batch_sizes.split(",")],
+        repeats=args.repeats, key=jax.random.PRNGKey(args.seed + 2))
+    write_bench(args.out, bench)
+    for row in bench["results"]:
+        print(f"batch {row['batch_size']:>6d} (bucket {row['bucket']:>5d}): "
+              f"{row['assignments_per_sec']:>12.0f} assignments/sec")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

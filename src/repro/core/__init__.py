@@ -3,8 +3,9 @@ from repro.core.kernels_fn import (make_kernel, polynomial_kernel, rbf_kernel,
                                    gram_matrix, stripe_iterator)
 from repro.core.kmeans import kmeans, kmeans_plus_plus, KMeansResult
 from repro.core.sketch import (fwht, make_srht, srht_apply, srht_apply_t,
-                               randomized_eig, one_pass_core, sketch_stream,
-                               next_pow2, SRHT, LowRankEig)
+                               randomized_eig, randomized_eig_with_state,
+                               one_pass_core, sketch_stream,
+                               next_pow2, SRHT, LowRankEig, SketchedEig)
 from repro.core.onepass import one_pass_kernel_kmeans, linearized_kmeans_from_Y
 from repro.core.nystrom import nystrom, NystromResult
 from repro.core.exact import exact_eig, exact_eig_from_gram, ExactEig

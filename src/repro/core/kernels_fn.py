@@ -8,7 +8,7 @@ sketch (core/sketch.py) and the distributed pipeline (distributed/).
 from __future__ import annotations
 
 import functools
-from typing import Callable, Iterator, Tuple
+from typing import Callable, Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,29 +62,45 @@ def gram_matrix(kernel: KernelFn, X: jnp.ndarray) -> jnp.ndarray:
     return kernel(X, X)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3))
-def gram_stripe(kernel: KernelFn, X: jnp.ndarray, start: jnp.ndarray,
-                block: int) -> jnp.ndarray:
-    """Column stripe K[:, start:start+block] = kappa(X, X[:, start:start+block]).
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def gram_stripe(kernel: KernelFn, lhs: jnp.ndarray, X: jnp.ndarray,
+                start: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Stripe kappa(lhs, X[:, start:start+block]) of the (rectangular) gram.
 
-    jit-compiled once per (kernel, block) and reused across the streaming
-    pass; `start` is a traced scalar so the loop does not recompile.
+    jit-compiled once per (kernel, shapes, block) and reused across the
+    streaming pass; `start` is a traced scalar so the loop does not
+    recompile. Callers must pad X to a column multiple of `block`
+    (stripe_iterator does) so the dynamic slice never clamps.
     """
     Xb = jax.lax.dynamic_slice_in_dim(X, start, block, axis=1)
-    return kernel(X, Xb)
+    return kernel(lhs, Xb)
 
 
-def stripe_iterator(kernel: KernelFn, X: jnp.ndarray,
-                    block: int) -> Iterator[Tuple[int, jnp.ndarray]]:
-    """Yield (start, K[:, start:start+width]) stripes covering all n columns.
+def stripe_iterator(kernel: KernelFn, X: jnp.ndarray, block: int,
+                    lhs: Optional[jnp.ndarray] = None,
+                    pad_tail: bool = False
+                    ) -> Iterator[Tuple[int, jnp.ndarray]]:
+    """Yield (start, kappa(lhs, X[:, start:start+width])) covering all n cols.
 
-    The last stripe is truncated (not padded) so downstream accumulation
-    indexes stay exact.
+    lhs defaults to X (the paper's square gram stripes). Passing the
+    training matrix as `lhs` with query columns in `X` yields the
+    rectangular stripes of the out-of-sample extension path (repro.serve).
+
+    Every stripe — including the ragged tail — goes through the ONE jitted
+    `gram_stripe` executable: X is zero-padded to a column multiple of
+    `block` up front and the tail stripe is sliced back to its true width.
+    (Kernel values against padded zero columns land only in the sliced-off
+    region; column j of kappa(lhs, X) depends only on column j of X.)
+    With pad_tail=True the tail is yielded unsliced at full `block` width so
+    downstream consumers can also keep a single compiled path; callers then
+    slice using the yielded start and their own n.
     """
     n = X.shape[1]
+    lhs = X if lhs is None else lhs
+    n_pad = -(-n // block) * block
+    Xp = X if n_pad == n else jnp.pad(X, ((0, 0), (0, n_pad - n)))
     for start in range(0, n, block):
         width = min(block, n - start)
-        if width == block:
-            yield start, gram_stripe(kernel, X, jnp.asarray(start), block)
-        else:
-            yield start, kernel(X, X[:, start:start + width])
+        stripe = gram_stripe(kernel, lhs, Xp, jnp.asarray(start), block)
+        yield start, (stripe if width == block or pad_tail
+                      else stripe[:, :width])

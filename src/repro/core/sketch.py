@@ -139,6 +139,19 @@ class LowRankEig(NamedTuple):
     Y: jnp.ndarray        # (r, n) linearized samples: K_hat = Y^T Y
     Q: jnp.ndarray        # (n, r)
     eigvals: jnp.ndarray  # (r,) eigenvalues of B (>= 0)
+    U: jnp.ndarray        # (n, r) orthonormal eigenvector basis Q V of K_hat
+
+
+class SketchedEig(NamedTuple):
+    """randomized_eig result WITH the sketch state Alg. 1 consumed.
+
+    The sketch (SRHT signs/rows or the dense Gaussian Omega) fully
+    determines the fit given (key, X); exposing it makes a fit
+    reproducible and serializable — repro.serve persists it inside the
+    FittedModel artifact.
+    """
+    eig: LowRankEig
+    sketch: Tuple        # SRHT or GaussianSketch NamedTuple
 
 
 def sketch_stream(kernel: KernelFn, X: jnp.ndarray, srht: SRHT,
@@ -185,9 +198,48 @@ def one_pass_core(W: jnp.ndarray, omega_t_q_fn, r: int) -> LowRankEig:
     evals, V = jnp.linalg.eigh(B)
     evals = jnp.maximum(evals[::-1], 0.0)         # descending, clipped
     V = V[:, ::-1]
-    # Line 6: Y = Sigma^{1/2} V^T Q^T  in R^{r x n}.
-    Y = (jnp.sqrt(evals[:r])[:, None] * V[:, :r].T) @ Q.T
-    return LowRankEig(Y=Y, Q=Q[:, :r], eigvals=evals[:r])
+    # Line 6: Y = Sigma^{1/2} V^T Q^T = Sigma^{1/2} U^T  in R^{r x n},
+    # where U = Q V is the (orthonormal) eigenvector basis of
+    # K_hat = U Sigma U^T — the out-of-sample extension operator
+    # (repro.serve) is Sigma^{-1/2} U^T.
+    U = Q @ V[:, :r]
+    Y = jnp.sqrt(evals[:r])[:, None] * U.T
+    return LowRankEig(Y=Y, Q=Q[:, :r], eigvals=evals[:r], U=U)
+
+
+def randomized_eig_with_state(key: jax.Array, kernel: KernelFn,
+                              X: jnp.ndarray, r: int,
+                              oversampling: int = 10, block: int = 512,
+                              sketch_type: str = "srht",
+                              fwht_fn: Optional[Callable] = None,
+                              truncate_basis: bool = False) -> SketchedEig:
+    """randomized_eig that also returns the sketch state (SRHT / Gaussian).
+
+    The sketch used to be discarded; repro.serve persists it in the fitted
+    artifact so a deployment is reproducible from (artifact, X) alone.
+    """
+    n = X.shape[1]
+    r_prime = r + oversampling
+    if sketch_type == "srht":
+        sketch = make_srht(key, n, r_prime)
+        W = sketch_stream(kernel, X, sketch, block, fwht_fn)
+        omega_t_q = lambda Q: srht_apply_t(sketch, Q, fwht_fn)
+    elif sketch_type == "gaussian":
+        sketch = make_gaussian(key, n, r_prime)
+        W = jnp.zeros((n, r_prime), jnp.float32)
+        for start, stripe in stripe_iterator(kernel, X, block):
+            W = jax.lax.dynamic_update_slice(
+                W, stripe.T @ sketch.omega, (start, 0))  # rows = stripe^T Om
+        omega_t_q = lambda Q: sketch.omega.T @ Q
+    else:
+        raise ValueError(f"unknown sketch_type {sketch_type!r}")
+    if truncate_basis:
+        # Literal Alg. 1 line 3: project the sketch onto its r leading left
+        # singular vectors before the core solve (ablation; loses the
+        # oversampling benefit — see one_pass_core docstring).
+        U, S, Vt = jnp.linalg.svd(W, full_matrices=False)
+        W = (U[:, :r] * S[None, :r]) @ Vt[:r]
+    return SketchedEig(eig=one_pass_core(W, omega_t_q, r), sketch=sketch)
 
 
 def randomized_eig(key: jax.Array, kernel: KernelFn, X: jnp.ndarray, r: int,
@@ -202,26 +254,6 @@ def randomized_eig(key: jax.Array, kernel: KernelFn, X: jnp.ndarray, r: int,
     truncate_basis: ablation flag — truncate Q to r columns BEFORE the core
     solve (Alg. 1 line 3 read literally; see one_pass_core docstring).
     """
-    n = X.shape[1]
-    r_prime = r + oversampling
-    if sketch_type == "srht":
-        srht = make_srht(key, n, r_prime)
-        W = sketch_stream(kernel, X, srht, block, fwht_fn)
-        omega_t_q = lambda Q: srht_apply_t(srht, Q, fwht_fn)
-    elif sketch_type == "gaussian":
-        g = make_gaussian(key, n, r_prime)
-        W = jnp.zeros((n, r_prime), jnp.float32)
-        for start, stripe in stripe_iterator(kernel, X, block):
-            width = stripe.shape[1]
-            W = jax.lax.dynamic_update_slice(
-                W, stripe.T @ g.omega, (start, 0))   # rows of W = stripe^T Om
-        omega_t_q = lambda Q: g.omega.T @ Q
-    else:
-        raise ValueError(f"unknown sketch_type {sketch_type!r}")
-    if truncate_basis:
-        # Literal Alg. 1 line 3: project the sketch onto its r leading left
-        # singular vectors before the core solve (ablation; loses the
-        # oversampling benefit — see one_pass_core docstring).
-        U, S, Vt = jnp.linalg.svd(W, full_matrices=False)
-        W = (U[:, :r] * S[None, :r]) @ Vt[:r]
-    return one_pass_core(W, omega_t_q, r)
+    return randomized_eig_with_state(key, kernel, X, r, oversampling, block,
+                                     sketch_type, fwht_fn,
+                                     truncate_basis).eig

@@ -96,6 +96,20 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> Dict:
+    """Manifest (paths/shapes/dtypes) of a checkpoint without loading leaves.
+
+    Lets callers that only persisted a flat dict of arrays (e.g. the
+    repro.serve FittedModel artifact) rebuild a `state_like` skeleton for
+    restore_checkpoint from the checkpoint itself.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = pathlib.Path(ckpt_dir) / f"step_{step}"
+    return json.loads((path / "manifest.json").read_text())
+
+
 def restore_checkpoint(ckpt_dir: str, state_like: Any,
                        step: Optional[int] = None, mesh=None,
                        pspecs: Any = None) -> Tuple[Any, int]:

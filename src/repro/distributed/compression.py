@@ -26,7 +26,6 @@ from repro.core.sketch import fwht, next_pow2
 
 def _flatten(tree) -> Tuple[jnp.ndarray, Any, list]:
     leaves, treedef = jax.tree.flatten(tree)
-    sizes = [l.size for l in leaves]
     vec = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
                            for l in leaves])
     return vec, treedef, [(l.shape, l.dtype) for l in leaves]

@@ -159,7 +159,14 @@ def computation_weights(comps: Dict[str, Computation]
                     if callee in edges:
                         edges[callee].append((cname, 1.0))
                         called.add(callee)
-                        fused.add(callee)
+                        # Only computations inlined into a fusion (or used as
+                        # a reducer/comparator via to_apply on a real op) live
+                        # in registers/VMEM. A plain `call` op (e.g. the CPU
+                        # backend's parallel-task wrapper inside while bodies)
+                        # executes its body at top level, so its ops DO touch
+                        # HBM and must keep their trip-count weight.
+                        if op.kind != "call":
+                            fused.add(callee)
     # Fusion-reachability is transitive.
     changed = True
     while changed:

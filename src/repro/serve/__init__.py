@@ -1,0 +1,25 @@
+"""repro.serve: fit once, assign millions — out-of-sample inference.
+
+The training side (repro.core) produces a compact linearization
+Y = Sigma^{1/2} U^T of the kernel matrix; this package turns that fit into
+a deployable service:
+
+  artifact.py   FittedModel pytree + atomic save/load (ModelSpec sidecar,
+                arrays via repro.distributed.checkpoint)
+  extend.py     streaming Nystrom-style out-of-sample extension
+                y(x) = Sigma^{-1/2} U^T kappa(X_train, x) and cluster
+                assignment (jnp or fused Pallas kmeans_assign path)
+  batcher.py    micro-batching with power-of-two shape buckets so variable
+                query traffic never retraces; coalescing request queue
+  registry.py   multi-model registry: one process, many fitted models
+  bench.py      assignments/sec measurement -> BENCH_serve.json
+
+CLI: `python -m repro.launch.serve_cluster --smoke` round-trips
+fit -> save -> load -> query and reports throughput.
+"""
+from repro.serve.artifact import (FittedModel, ModelSpec, fit_model,
+                                  load_model, save_model)
+from repro.serve.batcher import MicroBatcher, bucket_size
+from repro.serve.bench import benchmark_assign, write_bench
+from repro.serve.extend import assign, embed
+from repro.serve.registry import DEFAULT_REGISTRY, ModelRegistry

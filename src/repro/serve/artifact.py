@@ -1,0 +1,168 @@
+"""FittedModel: the deployable artifact of a one-pass kernel-clustering fit.
+
+A fit (Alg. 1) collapses to a small set of arrays that fully determine the
+serving-time behaviour:
+
+    X_train    (p, n)     training data — the extension path evaluates
+                          kappa(X_train, x_new) against it in stripes
+    U          (n, r)     orthonormal eigenvector basis of K_hat = U S U^T
+    eigvals    (r,)       eigenvalues S (descending, >= 0)
+    centroids  (k, r)     K-means centroids in the linearized space
+    sketch_*              the SRHT state (signs of D, sampled rows of R) or
+                          the dense Gaussian Omega — not needed to serve,
+                          but persisted so the fit is reproducible from the
+                          artifact alone
+
+plus a static `ModelSpec` (kernel name/params, dimensions, sketch type).
+
+On-disk artifact format (built on repro.distributed.checkpoint):
+
+    <dir>/spec.json        ModelSpec (static metadata)
+    <dir>/step_0/          atomic checkpoint of the array state
+        manifest.json      flat-dict paths, shapes, dtypes
+        leaf_<i>.npy       one file per array
+
+save/load reuse the checkpoint layer's atomic-rename commit, so a reader
+never observes a half-written artifact, and `read_manifest` rebuilds the
+restore skeleton without guessing shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels_fn import KernelFn, make_kernel
+from repro.core.kmeans import kmeans
+from repro.core.sketch import SRHT, randomized_eig_with_state
+from repro.distributed import checkpoint as ckpt
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static (non-array) metadata of a fitted model."""
+    kernel: str                  # registry name: polynomial | rbf | linear
+    kernel_params: Dict          # e.g. {"gamma": 0.0, "degree": 2}
+    n: int                       # training points
+    p: int                       # input dimension
+    r: int                       # target rank (= serving embed dim)
+    k: int                       # clusters
+    oversampling: int            # l; r' = r + l
+    block: int                   # streaming stripe width (memory budget)
+    sketch_type: str             # srht | gaussian
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=1, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ModelSpec":
+        return cls(**json.loads(text))
+
+
+class FittedModel(NamedTuple):
+    """Deployable fit artifact; see module docstring for the field model."""
+    spec: ModelSpec
+    X_train: jnp.ndarray               # (p, n)
+    U: jnp.ndarray                     # (n, r)
+    eigvals: jnp.ndarray               # (r,)
+    centroids: jnp.ndarray             # (k, r)
+    sketch_signs: Optional[jnp.ndarray] = None   # (n_pad,)  srht only
+    sketch_rows: Optional[jnp.ndarray] = None    # (r',)     srht only
+    sketch_omega: Optional[jnp.ndarray] = None   # (n, r')   gaussian only
+
+    @property
+    def Y(self) -> jnp.ndarray:
+        """Fitted linearization Sigma^{1/2} U^T in R^{r x n} (recomputed)."""
+        return jnp.sqrt(self.eigvals)[:, None] * self.U.T
+
+    def kernel_fn(self) -> KernelFn:
+        return _cached_kernel(self.spec.kernel,
+                              tuple(sorted(self.spec.kernel_params.items())))
+
+
+# gram_stripe jit-caches on the kernel *callable's identity*, so serving must
+# hand it the same callable every call — memoize construction per spec.
+_KERNEL_CACHE: Dict[tuple, KernelFn] = {}
+
+
+def _cached_kernel(name: str, params: tuple) -> KernelFn:
+    key = (name, params)
+    if key not in _KERNEL_CACHE:
+        _KERNEL_CACHE[key] = make_kernel(name, **dict(params))
+    return _KERNEL_CACHE[key]
+
+
+def fit_model(key: jax.Array, X: jnp.ndarray, k: int, r: int,
+              kernel: str = "polynomial",
+              kernel_params: Optional[Dict] = None,
+              oversampling: int = 10, block: int = 512,
+              sketch_type: str = "srht",
+              n_restarts: int = 10, max_iter: int = 20) -> FittedModel:
+    """Fit once: Alg. 1 (linearize + K-means) packaged as a FittedModel."""
+    if kernel_params is None:
+        kernel_params = ({"gamma": 0.0, "degree": 2}
+                         if kernel == "polynomial" else {})
+    spec = ModelSpec(kernel=kernel, kernel_params=dict(kernel_params),
+                     n=int(X.shape[1]), p=int(X.shape[0]), r=r, k=k,
+                     oversampling=oversampling, block=block,
+                     sketch_type=sketch_type)
+    kern = _cached_kernel(kernel, tuple(sorted(kernel_params.items())))
+    k_sketch, k_km = jax.random.split(key)
+    fit = randomized_eig_with_state(k_sketch, kern, X, r, oversampling,
+                                    block, sketch_type)
+    km = kmeans(k_km, fit.eig.Y.T, k, n_restarts=n_restarts,
+                max_iter=max_iter)
+    sketch = fit.sketch
+    srht = isinstance(sketch, SRHT)
+    return FittedModel(
+        spec=spec, X_train=jnp.asarray(X, jnp.float32),
+        U=fit.eig.U, eigvals=fit.eig.eigvals, centroids=km.centroids,
+        sketch_signs=sketch.signs if srht else None,
+        sketch_rows=sketch.rows if srht else None,
+        sketch_omega=None if srht else sketch.omega)
+
+
+# ---------------------------------------------------------------------------
+# save / load on top of repro.distributed.checkpoint
+# ---------------------------------------------------------------------------
+
+def _array_state(model: FittedModel) -> Dict[str, jnp.ndarray]:
+    state = {"X_train": model.X_train, "U": model.U,
+             "eigvals": model.eigvals, "centroids": model.centroids}
+    for name in ("sketch_signs", "sketch_rows", "sketch_omega"):
+        val = getattr(model, name)
+        if val is not None:
+            state[name] = val
+    return state
+
+
+def save_model(model: FittedModel, artifact_dir: str) -> str:
+    """Persist atomically; returns the artifact directory."""
+    base = pathlib.Path(artifact_dir)
+    base.mkdir(parents=True, exist_ok=True)
+    ckpt.save_checkpoint(str(base), step=0, state=_array_state(model),
+                         blocking=True)
+    (base / "spec.json").write_text(model.spec.to_json())
+    return str(base)
+
+
+def load_model(artifact_dir: str) -> FittedModel:
+    base = pathlib.Path(artifact_dir)
+    spec = ModelSpec.from_json((base / "spec.json").read_text())
+    manifest = ckpt.read_manifest(str(base), step=0)
+    state_like = {}
+    for path, shape, dtype in zip(manifest["paths"], manifest["shapes"],
+                                  manifest["dtypes"]):
+        name = path.strip("[]'\"")
+        state_like[name] = jnp.zeros(shape, dtype=dtype)
+    state, _ = ckpt.restore_checkpoint(str(base), state_like, step=0)
+    return FittedModel(spec=spec, X_train=state["X_train"], U=state["U"],
+                       eigvals=state["eigvals"],
+                       centroids=state["centroids"],
+                       sketch_signs=state.get("sketch_signs"),
+                       sketch_rows=state.get("sketch_rows"),
+                       sketch_omega=state.get("sketch_omega"))

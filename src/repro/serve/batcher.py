@@ -1,0 +1,118 @@
+"""Micro-batching for the query path: pow-2 shape buckets, no retracing.
+
+jit specializes on shapes, so serving raw variable-size batches would
+compile a fresh executable per distinct batch size — unbounded compile
+cache, latency cliffs on first-seen sizes. Policy here:
+
+  - a batch of b queries is zero-padded up to bucket(b), the next power of
+    two clamped to [min_bucket, max_bucket]; results for the padded columns
+    are computed and discarded (columns are independent, so real queries
+    are bit-identical to an unpadded run at the same padded width);
+  - batches wider than max_bucket are chunked into full max_bucket pieces
+    (the steady-state shape) plus one bucketed remainder;
+  - at most log2(max_bucket / min_bucket) + 1 executables ever exist per
+    model, all tracked in `stats` so tests can assert the no-retrace
+    property.
+
+`MicroBatcher` also provides a coalescing request queue: `submit()` enqueues
+any number of independent requests, `drain()` runs them as ONE concatenated
+bucketed batch and scatters labels back per request — the standard
+GPU/TPU-serving micro-batch pattern, deterministic and thread-free so the
+behaviour is exactly testable.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sketch import next_pow2
+from repro.serve import extend
+from repro.serve.artifact import FittedModel
+
+
+def bucket_size(b: int, min_bucket: int = 8, max_bucket: int = 1024) -> int:
+    """Next power of two >= b, clamped to [min_bucket, max_bucket]."""
+    if b < 1:
+        raise ValueError(f"batch size must be positive, got {b}")
+    return max(min_bucket, min(next_pow2(b), max_bucket))
+
+
+class MicroBatcher:
+    """Bucketed assignment front-end for one FittedModel."""
+
+    def __init__(self, model: FittedModel, block: Optional[int] = None,
+                 min_bucket: int = 8, max_bucket: int = 1024,
+                 fused: Optional[bool] = None):
+        self.model = model
+        self.block = block or model.spec.block
+        self.min_bucket = min_bucket
+        self.max_bucket = max_bucket
+        self.fused = fused
+        self._pending: List[np.ndarray] = []
+        self.stats: Dict = {"queries": 0, "padded_queries": 0,
+                            "batches": 0, "bucket_hits": {}}
+
+    # -- bucketed one-shot path ------------------------------------------
+
+    def assign_batch(self, Xq: jnp.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Bucketed assignment of Xq (p, b) -> (labels (b,), d2 (b,))."""
+        b = Xq.shape[1]
+        if b == 0:
+            return (np.zeros((0,), np.int32), np.zeros((0,), np.float32))
+        labels, d2 = [], []
+        for start in range(0, b, self.max_bucket):
+            chunk = Xq[:, start:start + self.max_bucket]
+            lab, dd = self._assign_bucketed(chunk)
+            labels.append(lab)
+            d2.append(dd)
+        return np.concatenate(labels), np.concatenate(d2)
+
+    def _assign_bucketed(self, chunk: jnp.ndarray
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        w = chunk.shape[1]
+        bsz = bucket_size(w, self.min_bucket, self.max_bucket)
+        padded = (chunk if w == bsz
+                  else jnp.pad(chunk, ((0, 0), (0, bsz - w))))
+        lab, d2 = extend.assign(self.model, padded, self.block, self.fused)
+        self.stats["queries"] += w
+        self.stats["padded_queries"] += bsz - w
+        self.stats["batches"] += 1
+        self.stats["bucket_hits"][bsz] = \
+            self.stats["bucket_hits"].get(bsz, 0) + 1
+        return np.asarray(lab[:w]), np.asarray(d2[:w])
+
+    # -- coalescing request queue ----------------------------------------
+
+    def submit(self, Xq: jnp.ndarray) -> int:
+        """Enqueue one request of queries (p, b_i); returns its ticket."""
+        if Xq.ndim != 2 or Xq.shape[0] != self.model.spec.p \
+                or Xq.shape[1] < 1:
+            raise ValueError(f"request must be (p={self.model.spec.p}, "
+                             f"b>=1), got {Xq.shape}")
+        self._pending.append(np.asarray(Xq, np.float32))
+        return len(self._pending) - 1
+
+    def drain(self) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Run all pending requests as one coalesced bucketed batch.
+
+        Returns [(labels_i, d2_i)] aligned with submission order.
+        """
+        if not self._pending:
+            return []
+        widths = [x.shape[1] for x in self._pending]
+        big = jnp.asarray(np.concatenate(self._pending, axis=1))
+        self._pending = []
+        labels, d2 = self.assign_batch(big)
+        out, off = [], 0
+        for w in widths:
+            out.append((labels[off:off + w], d2[off:off + w]))
+            off += w
+        return out
+
+    @property
+    def executables(self) -> List[int]:
+        """Bucket sizes compiled so far (sorted) — the retrace budget."""
+        return sorted(self.stats["bucket_hits"])

@@ -1,0 +1,69 @@
+"""Serving throughput measurement: assignments/sec per query batch size.
+
+One warmup call per batch size pays the compile; timed calls then measure
+the steady-state bucketed path (the number the ROADMAP north star cares
+about). Results serialize to BENCH_serve.json:
+
+    {"model": {...spec...},
+     "backend": "cpu",
+     "batch_sizes": [...],
+     "results": [{"batch_size": b, "bucket": B, "calls": c,
+                  "wall_s": t, "assignments_per_sec": qps}, ...]}
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.artifact import FittedModel
+from repro.serve.batcher import MicroBatcher, bucket_size
+
+
+def benchmark_assign(model: FittedModel,
+                     batch_sizes: Sequence[int] = (64, 512),
+                     repeats: int = 5,
+                     key: Optional[jax.Array] = None,
+                     block: Optional[int] = None,
+                     fused: Optional[bool] = None,
+                     max_bucket: int = 1024) -> Dict:
+    """Drive synthetic query load through a MicroBatcher; returns the dict
+    documented in the module docstring."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    batcher = MicroBatcher(model, block=block, fused=fused,
+                           max_bucket=max_bucket)
+    results = []
+    for b in batch_sizes:
+        Xq = jax.random.normal(key, (model.spec.p, b), jnp.float32)
+        batcher.assign_batch(Xq)                    # warmup / compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            # assign_batch returns host numpy arrays, so the wall time
+            # includes device sync — honest throughput.
+            batcher.assign_batch(Xq)
+        wall = time.perf_counter() - t0
+        results.append({
+            "batch_size": int(b),
+            "bucket": bucket_size(b, batcher.min_bucket, batcher.max_bucket),
+            "calls": int(repeats),
+            "wall_s": wall,
+            "assignments_per_sec": b * repeats / wall,
+        })
+    return {
+        "model": dataclasses.asdict(model.spec),
+        "backend": jax.default_backend(),
+        "batch_sizes": [int(b) for b in batch_sizes],
+        "results": results,
+        "bucket_executables": batcher.executables,
+    }
+
+
+def write_bench(path: str, bench: Dict) -> str:
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path

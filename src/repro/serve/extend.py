@@ -1,0 +1,92 @@
+"""Out-of-sample extension: embed and assign new points against a fit.
+
+The fit gives K_hat = U Sigma U^T, so the Nystrom-style extension of a new
+point x is
+
+    y(x) = Sigma^{-1/2} U^T kappa(X_train, x)          in R^r
+
+which reproduces the fitted Y exactly on the training points whenever the
+kernel matrix is (numerically) rank <= r' — for a training point x_j,
+kappa(X_train, x_j) = K e_j = U Sigma U^T e_j and the formula collapses to
+Sigma^{1/2} U^T e_j = Y e_j.
+
+Memory model: the (n, b) kernel block kappa(X_train, X_query) is never
+materialized beyond n x min(b, block) — query columns stream through
+`kernels_fn.stripe_iterator` (lhs=X_train) in stripes of the SAME `block`
+the training pass used, so serving never exceeds the training-time memory
+budget no matter how many queries arrive at once. Each stripe — ragged
+tails included — runs through one jitted gram_stripe executable and one
+jitted projection executable (pad_tail=True), so steady-state serving
+never retraces.
+
+Assignment offers two paths: a pure-jnp distance argmin, and a fused path
+that reuses the Pallas kmeans_assign kernel (distance + argmin in VMEM, the
+(b, k) matrix never leaves the chip). On CPU the Pallas kernel runs in
+interpret mode, so the jnp path is the default there.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels_fn import stripe_iterator
+from repro.core.kmeans import _sq_dists
+from repro.kernels.kmeans_assign.ops import assign_pallas
+from repro.serve.artifact import FittedModel
+
+_EIG_EPS = 1e-7
+
+
+@jax.jit
+def _project_stripe(U: jnp.ndarray, eigvals: jnp.ndarray,
+                    stripe: jnp.ndarray) -> jnp.ndarray:
+    """Sigma^{-1/2} U^T applied to one (n, block) kernel stripe -> (r, block).
+
+    Eigenvalues below _EIG_EPS (rank-deficient directions) map to 0 rather
+    than exploding; those coordinates carry no kernel mass anyway.
+    """
+    inv_sqrt = jnp.where(eigvals > _EIG_EPS, 1.0 / jnp.sqrt(eigvals), 0.0)
+    return (inv_sqrt[:, None] * U.T) @ stripe
+
+
+def embed(model: FittedModel, Xq: jnp.ndarray,
+          block: Optional[int] = None) -> jnp.ndarray:
+    """Embed query points Xq (p, b) -> Y_q (r, b), streaming over columns."""
+    if Xq.shape[0] != model.spec.p:
+        raise ValueError(f"query dim {Xq.shape[0]} != model dim "
+                         f"{model.spec.p}")
+    block = block or model.spec.block
+    kern = model.kernel_fn()
+    b = Xq.shape[1]
+    out = jnp.zeros((model.spec.r, b), jnp.float32)
+    for start, stripe in stripe_iterator(kern, Xq, block, lhs=model.X_train,
+                                         pad_tail=True):
+        yb = _project_stripe(model.U, model.eigvals, stripe)
+        width = min(block, b - start)
+        out = jax.lax.dynamic_update_slice(out, yb[:, :width], (0, start))
+    return out
+
+
+@jax.jit
+def _assign_jnp(Yq: jnp.ndarray, C: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    d2 = _sq_dists(Yq, C)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)
+
+
+def assign(model: FittedModel, Xq: jnp.ndarray,
+           block: Optional[int] = None, fused: Optional[bool] = None
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Assign queries to fitted clusters: (labels (b,), sq distance (b,)).
+
+    fused=True routes the argmin through the Pallas kmeans_assign kernel
+    (the serving hot path on TPU); default picks it off-CPU.
+    """
+    if fused is None:
+        fused = jax.default_backend() != "cpu"
+    Yq = embed(model, Xq, block).T                       # (b, r)
+    if fused:
+        return assign_pallas(Yq, model.centroids)
+    return _assign_jnp(Yq, model.centroids)

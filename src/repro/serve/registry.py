@@ -1,0 +1,69 @@
+"""Multi-model registry: one process serves several fitted models by name.
+
+A registry row owns the FittedModel and lazily a MicroBatcher per model, so
+`registry.batcher("segmentation").assign_batch(Xq)` is the whole serving
+call. Loading is artifact-directory based; registering the same name twice
+requires overwrite=True to avoid silently hot-swapping a live model.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.serve.artifact import FittedModel, load_model, save_model
+from repro.serve.batcher import MicroBatcher
+
+
+class ModelRegistry:
+    def __init__(self):
+        self._models: Dict[str, FittedModel] = {}
+        self._batchers: Dict[str, MicroBatcher] = {}
+
+    def register(self, name: str, model: FittedModel,
+                 overwrite: bool = False) -> FittedModel:
+        if name in self._models and not overwrite:
+            raise ValueError(f"model {name!r} already registered "
+                             f"(overwrite=True to replace)")
+        self._models[name] = model
+        self._batchers.pop(name, None)
+        return model
+
+    def get(self, name: str) -> FittedModel:
+        if name not in self._models:
+            raise KeyError(f"no model {name!r}; have {self.names()}")
+        return self._models[name]
+
+    def unregister(self, name: str) -> None:
+        self._models.pop(name, None)
+        self._batchers.pop(name, None)
+
+    def names(self) -> List[str]:
+        return sorted(self._models)
+
+    def load(self, name: str, artifact_dir: str,
+             overwrite: bool = False) -> FittedModel:
+        return self.register(name, load_model(artifact_dir), overwrite)
+
+    def save(self, name: str, artifact_dir: str) -> str:
+        return save_model(self.get(name), artifact_dir)
+
+    def batcher(self, name: str, **kwargs) -> MicroBatcher:
+        """Per-model MicroBatcher, cached so its executable stats persist.
+
+        kwargs are only honoured on first construction for a given name.
+        """
+        if name not in self._batchers:
+            self._batchers[name] = MicroBatcher(self.get(name), **kwargs)
+        return self._batchers[name]
+
+
+# Process-wide default registry (what the serve_cluster CLI drives).
+DEFAULT_REGISTRY = ModelRegistry()
+
+
+def register(name: str, model: FittedModel,
+             overwrite: bool = False) -> FittedModel:
+    return DEFAULT_REGISTRY.register(name, model, overwrite)
+
+
+def get(name: str) -> FittedModel:
+    return DEFAULT_REGISTRY.get(name)
