@@ -1,11 +1,19 @@
-"""Serving throughput benchmark -> BENCH_serve.json.
+"""Serving benchmark -> BENCH_serve.json: sync, async, and sharded modes.
 
-Fits a model on synthetic blob+ring data, then measures bucketed
-assignments/sec through repro.serve.bench at several query batch sizes.
+Fits a model on synthetic blob+ring data, then measures:
+
+  --mode sync     bucketed assignments/sec per batch size (MicroBatcher)
+  --mode async    request latency p50/p95/p99 + SLO accounting through
+                  the deadline-driven AsyncBatcher
+  --mode all      both (default)
+
+Add --sharded to run the extension matmul mesh-sharded over all local
+devices (set XLA_FLAGS=--xla_force_host_platform_device_count=8 to fake a
+CPU mesh).
 
   PYTHONPATH=src python benchmarks/bench_serve.py
   PYTHONPATH=src python benchmarks/bench_serve.py --n 8000 \
-      --batch-sizes 64,512,4096 --out BENCH_serve.json
+      --batch-sizes 64,512,4096 --mode all --slo-ms 100 --out BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -23,24 +31,40 @@ def main():
     ap.add_argument("--block", type=int, default=512)
     ap.add_argument("--batch-sizes", default="64,512")
     ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--mode", default="all", choices=["sync", "async", "all"])
+    ap.add_argument("--async-requests", type=int, default=256)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--slo-ms", type=float, default=250.0)
+    ap.add_argument("--sharded", action="store_true",
+                    help="mesh-shard the extension over all local devices")
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     from repro.data import blob_ring
-    from repro.serve import benchmark_assign, fit_model, write_bench
+    from repro.serve import fit_model, write_bench
+    from repro.serve.bench import format_bench, run_benches
 
     key = jax.random.PRNGKey(args.seed)
     X, _ = blob_ring(key, n=args.n)
     model = fit_model(jax.random.PRNGKey(args.seed + 1), X, k=args.k,
                       r=args.r, oversampling=args.l, block=args.block)
-    bench = benchmark_assign(
-        model, batch_sizes=[int(b) for b in args.batch_sizes.split(",")],
-        repeats=args.repeats, key=jax.random.PRNGKey(args.seed + 2))
+    mesh = None
+    if args.sharded:
+        n_dev = len(jax.devices())
+        if n_dev < 2:
+            ap.error(f"--sharded needs >= 2 devices, have {n_dev}")
+        mesh = jax.make_mesh((n_dev,), ("data",))
+
+    modes = ("sync", "async") if args.mode == "all" else (args.mode,)
+    bench = run_benches(
+        model, modes=modes,
+        batch_sizes=[int(b) for b in args.batch_sizes.split(",")],
+        repeats=args.repeats, key=jax.random.PRNGKey(args.seed + 2),
+        mesh=mesh, n_requests=args.async_requests,
+        max_wait_ms=args.max_wait_ms, slo_ms=args.slo_ms)
     write_bench(args.out, bench)
-    for row in bench["results"]:
-        print(f"batch {row['batch_size']:>6d} (bucket {row['bucket']:>5d}): "
-              f"{row['assignments_per_sec']:>12.0f} assignments/sec")
+    print(format_bench(bench))
     print(f"wrote {args.out}")
 
 

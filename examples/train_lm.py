@@ -7,7 +7,6 @@ the production launcher lowers for the 512-chip mesh.
 Run: PYTHONPATH=src python examples/train_lm.py [--arch mixtral-8x7b]
      [--steps 200]
 """
-import argparse
 import sys
 
 sys.argv = [sys.argv[0]] + sys.argv[1:]

@@ -13,3 +13,18 @@ from repro.core.linearized import (objective_from_labels, brute_force_optimal,
                                    theorem1_bounds, best_rank_r, trace_norm)
 from repro.core.metrics import (clustering_accuracy, nmi, kernel_approx_error,
                                 kernel_approx_error_streaming)
+__all__ = [
+    "make_kernel", "polynomial_kernel", "rbf_kernel", "gram_matrix",
+    "stripe_iterator",
+    "kmeans", "kmeans_plus_plus", "KMeansResult",
+    "fwht", "make_srht", "srht_apply", "srht_apply_t", "randomized_eig",
+    "randomized_eig_with_state", "one_pass_core", "sketch_stream",
+    "next_pow2", "SRHT", "LowRankEig", "SketchedEig",
+    "one_pass_kernel_kmeans", "linearized_kmeans_from_Y",
+    "nystrom", "NystromResult",
+    "exact_eig", "exact_eig_from_gram", "ExactEig",
+    "objective_from_labels", "brute_force_optimal", "theorem1_bounds",
+    "best_rank_r", "trace_norm",
+    "clustering_accuracy", "nmi", "kernel_approx_error",
+    "kernel_approx_error_streaming",
+]

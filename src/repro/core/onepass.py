@@ -2,7 +2,18 @@
 
 A distinct preprocessing phase (one-pass randomized linearization of K)
 followed by standard K-means on the transformed samples Y in R^r, exactly as
-the paper advertises ("allows one to leverage existing algorithm libraries").
+the paper advertises ("allows one to leverage existing algorithm libraries"):
+
+    lines 1-6   K ~= U Sigma U^T  via the SRHT-sketched one-pass
+                eigendecomposition (core/sketch.py::randomized_eig),
+                yielding the linearization Y = Sigma^{1/2} U^T in R^{r x n}
+    line 7      standard K-means on the columns of Y (core/kmeans.py)
+
+so that  ||y_i - y_j||^2 = K̂_ii + K̂_jj - 2 K̂_ij  — Euclidean K-means on Y
+is kernel K-means under the rank-r approximation. The equation -> function
+map for every step lives in docs/ARCHITECTURE.md; the serving-time
+consumer of the same linearization (the out-of-sample extension
+y(x) = Sigma^{-1/2} U^T kappa(X_train, x)) is repro.serve.
 """
 from __future__ import annotations
 

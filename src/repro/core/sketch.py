@@ -15,6 +15,14 @@ This is the computational heart of the paper (Alg. 1 lines 1-6):
 O(n log n); on TPU the hot path is the Pallas kernel in
 `repro.kernels.fwht` — this module's `fwht` is the pure-jnp oracle and the
 CPU execution path. Cross-device FWHT lives in `repro.distributed.dfwht`.
+
+Two call surfaces: `randomized_eig` returns the LowRankEig alone (Y, the
+eigvals, and the orthonormal eigenvector basis U = Q V of K_hat);
+`randomized_eig_with_state` additionally returns the sketch state (SRHT
+signs/rows or the Gaussian Omega), which fully determines the fit given
+(key, X) — repro.serve persists it inside the FittedModel artifact so a
+deployment is reproducible from the artifact alone (ROADMAP "Serve
+subsystem").
 """
 from __future__ import annotations
 
@@ -215,8 +223,8 @@ def randomized_eig_with_state(key: jax.Array, kernel: KernelFn,
                               truncate_basis: bool = False) -> SketchedEig:
     """randomized_eig that also returns the sketch state (SRHT / Gaussian).
 
-    The sketch used to be discarded; repro.serve persists it in the fitted
-    artifact so a deployment is reproducible from (artifact, X) alone.
+    repro.serve persists the sketch in the fitted artifact so a
+    deployment is reproducible from the artifact alone.
     """
     n = X.shape[1]
     r_prime = r + oversampling

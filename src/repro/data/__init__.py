@@ -1,2 +1,3 @@
 from repro.data.synthetic import (two_rings, blob_ring, gaussian_blobs,
                                   segmentation_proxy)
+__all__ = ["two_rings", "blob_ring", "gaussian_blobs", "segmentation_proxy"]

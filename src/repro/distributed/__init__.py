@@ -1,3 +1,5 @@
 from repro.distributed.sharding import (param_pspecs, batch_pspecs,
                                         cache_pspecs, state_pspecs,
                                         maybe_shard, activation_sharding)
+__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "state_pspecs",
+           "maybe_shard", "activation_sharding"]

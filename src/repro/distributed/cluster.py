@@ -20,15 +20,14 @@ whole pipeline is the launch target of launch/cluster.py and the
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.sketch import fwht as _fwht, next_pow2
+from repro.core.sketch import next_pow2
 from repro.distributed.dfwht import distributed_fwht
 
 

@@ -15,8 +15,7 @@ subspace varies — both handled by `sketch_round_keys`.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ row-sharded kernel stripe without gathering it.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax

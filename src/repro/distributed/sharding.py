@@ -1,6 +1,11 @@
 """Sharding rules: 2D (FSDP x TP) weight sharding + batch/cache specs.
 
-Scheme (DESIGN.md §5):
+PartitionSpec policy for the LM-workload side of the repo (models/,
+train/, launch/dryrun); the clustering pipeline's sharding lives in
+distributed/cluster.py (training) and serve/extend.py::ShardedExtender
+(the mesh-sharded extension matmul, ROADMAP "Serve subsystem").
+
+Scheme:
 - every 2D projection W (d_in, d_out): P(fsdp, tp) — input dim sharded over
   the data(+pod) axes ZeRO-3 style, output dim tensor-parallel over 'model';
   "reduction" projections that map back to the residual stream (wo, w2, cv,
@@ -101,7 +106,6 @@ def maybe_shard(x: jnp.ndarray, kind: str = "btd") -> jnp.ndarray:
 
 def _dp_size() -> int:
     try:
-        import jax as _jax
         from jax.sharding import get_abstract_mesh
         m = get_abstract_mesh()
         if m is not None and m.axis_names:

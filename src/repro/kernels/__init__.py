@@ -13,3 +13,4 @@ the allclose test sweeps).
 from repro.kernels.fwht.ops import fwht_pallas
 from repro.kernels.gram.ops import gram_stripe_pallas
 from repro.kernels.kmeans_assign.ops import assign_pallas
+__all__ = ["fwht_pallas", "gram_stripe_pallas", "assign_pallas"]

@@ -21,18 +21,14 @@ Usage:
       --shape train_4k [--multipod] [--out artifacts/dryrun]
 """
 import argparse
-import functools
 import json
 import pathlib
-import re
-import sys
 import time
 
 
 def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
              overrides: dict = None) -> dict:
     import jax
-    import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs import get_config

@@ -14,7 +14,10 @@ count, fusion/call edges carry 1) and accumulates:
 
 Trip counts come from the `constant(N)` in the while condition computation
 (jax scans lower to 0..N LT-loops). Conservative fallbacks: unknown trip
-count -> 1 (matches XLA's own behaviour, and is logged).
+count -> 1 (matches XLA's own behaviour, and is logged). `lax.cond`
+branch_computations execute at top level (they are NOT fusion-internal),
+so their ops keep HBM traffic; each branch is weighted by the parent's
+trip weight — an upper bound, since only one branch runs per visit.
 
 This is an approximation (elementwise FLOPs ignored; fusion traffic assumes
 one read per operand) — but it is *structurally* exact for loops, which is
@@ -98,7 +101,8 @@ def _callees(op: Op) -> List[Tuple[str, str]]:
     """(role, computation) edges out of an op."""
     out = []
     for role in ("body", "condition", "calls", "to_apply",
-                 "branch_computations"):
+                 "branch_computations", "true_computation",
+                 "false_computation"):
         m = re.search(role + r"=\{([^}]*)\}", op.rest)
         if m:
             for c in m.group(1).split(","):
@@ -164,8 +168,13 @@ def computation_weights(comps: Dict[str, Computation]
                         # in registers/VMEM. A plain `call` op (e.g. the CPU
                         # backend's parallel-task wrapper inside while bodies)
                         # executes its body at top level, so its ops DO touch
-                        # HBM and must keep their trip-count weight.
-                        if op.kind != "call":
+                        # HBM and must keep their trip-count weight. The same
+                        # holds for `conditional` branch_computations
+                        # (lax.cond bodies): exactly one branch runs per
+                        # visit, but it runs at top level — treating it as
+                        # fusion-internal under-counted its HBM traffic
+                        # entirely (ROADMAP "HLO analyzer" item).
+                        if op.kind not in ("call", "conditional"):
                             fused.add(callee)
     # Fusion-reachability is transitive.
     changed = True

@@ -8,13 +8,20 @@ End-to-end demo/check of repro.serve on synthetic data:
        - out-of-sample embeddings of the TRAINING points reproduce the
          fitted Y (the extension identity; rel err <= 1e-4),
        - bucketed/batched assignment == unbatched assignment exactly,
-  4. drive synthetic query load at several batch sizes and write
-     assignments/sec to BENCH_serve.json.
+  4. drive synthetic query load and write BENCH_serve.json: synchronous
+     assignments/sec per batch size (--bench sync), async latency
+     percentiles p50/p95/p99 + SLO accounting through AsyncBatcher
+     (--bench async), or both (--bench all, the default),
+  5. verify the async path resolves futures bit-identically to a
+     synchronous drain of the same requests,
+  6. with --sharded, run the extension matmul mesh-sharded over all local
+     devices (set XLA_FLAGS=--xla_force_host_platform_device_count=8 to
+     fake a CPU mesh) and verify it matches the single-device path.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_cluster --smoke
   PYTHONPATH=src python -m repro.launch.serve_cluster --n 8000 --r 2 \
-      --batch-sizes 64,512,4096 --queries 8192
+      --batch-sizes 64,512,4096 --queries 8192 --bench all --slo-ms 250
 """
 from __future__ import annotations
 
@@ -47,6 +54,18 @@ def main():
     ap.add_argument("--queries", type=int, default=2048,
                     help="synthetic queries for the equality check")
     ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--bench", default="all",
+                    choices=["sync", "async", "all"],
+                    help="which benchmark modes land in BENCH_serve.json")
+    ap.add_argument("--async-requests", type=int, default=256,
+                    help="request count for the async latency bench")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="AsyncBatcher flush deadline")
+    ap.add_argument("--slo-ms", type=float, default=250.0,
+                    help="latency SLO for violation accounting")
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard the extension matmul over all local "
+                         "devices (needs >= 2)")
     ap.add_argument("--bench-out", default="BENCH_serve.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -55,8 +74,9 @@ def main():
         args.queries = min(args.queries, 1024)
 
     from repro.data import blob_ring
-    from repro.serve import (DEFAULT_REGISTRY, assign, benchmark_assign,
+    from repro.serve import (DEFAULT_REGISTRY, ShardedExtender, assign,
                              embed, fit_model, save_model, write_bench)
+    from repro.serve.bench import format_bench, run_benches
 
     key = jax.random.PRNGKey(args.seed)
     k_fit, k_query = jax.random.split(key)
@@ -117,16 +137,46 @@ def main():
     print(f"bucketed == unbatched == queued on {args.queries} queries "
           f"(buckets compiled: {batcher.executables})")
 
-    # Throughput at each requested batch size.
+    # Check 3: async futures resolve bit-identically to a sync drain.
+    sched = DEFAULT_REGISTRY.scheduler("demo", max_wait_ms=args.max_wait_ms,
+                                       slo_ms=args.slo_ms)
+    futs = [sched.submit(part)
+            for part in np.split(np.asarray(Xq), splits, axis=1)]
+    sched.flush()
+    labels_async = np.concatenate([f.result()[0] for f in futs])
+    assert np.array_equal(labels_bucketed, labels_async), \
+        "async scheduling changed assignments"
+    print(f"async == sync on {args.queries} queries "
+          f"({sched.latency.requests} requests recorded)")
+
+    # Optional: the mesh-sharded extension path against the local mesh.
+    mesh = None
+    if args.sharded:
+        n_dev = len(jax.devices())
+        if n_dev < 2:
+            ap.error(f"--sharded needs >= 2 devices, have {n_dev} (set "
+                     "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        ext = ShardedExtender(served, mesh)
+        Y_sh = ext.embed(Xq[:, :256])
+        Y_1d = embed(served, Xq[:, :256])
+        rel_sh = (float(jnp.linalg.norm(Y_sh - Y_1d)) /
+                  max(float(jnp.linalg.norm(Y_1d)), 1e-30))
+        assert rel_sh <= 1e-5, f"sharded embed != single-device: {rel_sh:.2e}"
+        print(f"sharded extension matches single-device over {n_dev} "
+              f"devices (rel err {rel_sh:.2e})")
+
+    # Benchmarks -> BENCH_serve.json (only the modes asked for run).
     batch_sizes = [int(b) for b in args.batch_sizes.split(",") if b.strip()]
     if not batch_sizes:
         ap.error(f"--batch-sizes {args.batch_sizes!r} parses to nothing")
-    bench = benchmark_assign(served, batch_sizes=batch_sizes,
-                             repeats=args.repeats, key=k_query)
+    modes = ("sync", "async") if args.bench == "all" else (args.bench,)
+    bench = run_benches(served, modes=modes, batch_sizes=batch_sizes,
+                        repeats=args.repeats, key=k_query, mesh=mesh,
+                        n_requests=args.async_requests,
+                        max_wait_ms=args.max_wait_ms, slo_ms=args.slo_ms)
     write_bench(args.bench_out, bench)
-    for row in bench["results"]:
-        print(f"batch {row['batch_size']:>6d} (bucket {row['bucket']:>5d}): "
-              f"{row['assignments_per_sec']:>12.0f} assignments/sec")
+    print(format_bench(bench))
     print(f"wrote {args.bench_out}")
 
     # Smoke also exercises the fused Pallas assignment path (interpret

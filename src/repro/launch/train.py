@@ -17,8 +17,6 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 
 def main():

@@ -1,2 +1,3 @@
 from repro.models.config import ArchConfig
 from repro.models.registry import get_api, ModelAPI
+__all__ = ["ArchConfig", "get_api", "ModelAPI"]

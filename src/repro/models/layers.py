@@ -8,9 +8,7 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

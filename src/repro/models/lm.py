@@ -9,7 +9,6 @@ time stay flat in depth; the scan body is rematerialized when cfg.remat.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

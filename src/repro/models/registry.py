@@ -1,10 +1,8 @@
 """Uniform model API over the 10 assigned architectures."""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
-import jax
-import jax.numpy as jnp
 
 from repro.models.config import ArchConfig
 from repro.models import lm, rglru, rwkv6, whisper

@@ -15,7 +15,7 @@ long_500k cell runnable for this arch.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ the cross K/V are projected once (at prefill) and cached.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,18 +8,37 @@ a deployable service:
                 arrays via repro.distributed.checkpoint)
   extend.py     streaming Nystrom-style out-of-sample extension
                 y(x) = Sigma^{-1/2} U^T kappa(X_train, x) and cluster
-                assignment (jnp or fused Pallas kmeans_assign path)
+                assignment (jnp or fused Pallas kmeans_assign path);
+                ShardedExtender shards the extension matmul over a mesh
   batcher.py    micro-batching with power-of-two shape buckets so variable
                 query traffic never retraces; coalescing request queue
+  scheduler.py  AsyncBatcher: futures per request, deadline-driven flush
+                (max_wait_ms or full bucket), SLO-accounted
+  latency.py    streaming latency histogram: p50/p95/p99, SLO violations
   registry.py   multi-model registry: one process, many fitted models
-  bench.py      assignments/sec measurement -> BENCH_serve.json
+  bench.py      sync/async/sharded benchmarks -> BENCH_serve.json
 
 CLI: `python -m repro.launch.serve_cluster --smoke` round-trips
-fit -> save -> load -> query and reports throughput.
+fit -> save -> load -> query; `--bench async` reports latency percentiles.
+Docs: docs/SERVING.md (serving semantics), docs/ARCHITECTURE.md (layers).
 """
 from repro.serve.artifact import (FittedModel, ModelSpec, fit_model,
                                   load_model, save_model)
 from repro.serve.batcher import MicroBatcher, bucket_size
-from repro.serve.bench import benchmark_assign, write_bench
-from repro.serve.extend import assign, embed
+from repro.serve.bench import (benchmark_assign, benchmark_async,
+                               format_bench, run_benches, write_bench)
+from repro.serve.extend import ShardedExtender, assign, embed, embed_sharded
+from repro.serve.latency import LatencyStats
 from repro.serve.registry import DEFAULT_REGISTRY, ModelRegistry
+from repro.serve.scheduler import AsyncBatcher
+
+__all__ = [
+    "FittedModel", "ModelSpec", "fit_model", "load_model", "save_model",
+    "MicroBatcher", "bucket_size",
+    "benchmark_assign", "benchmark_async", "format_bench", "run_benches",
+    "write_bench",
+    "ShardedExtender", "assign", "embed", "embed_sharded",
+    "LatencyStats",
+    "DEFAULT_REGISTRY", "ModelRegistry",
+    "AsyncBatcher",
+]

@@ -44,15 +44,27 @@ class MicroBatcher:
 
     def __init__(self, model: FittedModel, block: Optional[int] = None,
                  min_bucket: int = 8, max_bucket: int = 1024,
-                 fused: Optional[bool] = None):
+                 fused: Optional[bool] = None,
+                 mesh=None, mesh_axis: str = "data"):
         self.model = model
         self.block = block or model.spec.block
         self.min_bucket = min_bucket
         self.max_bucket = max_bucket
         self.fused = fused
+        # mesh != None routes every bucketed assignment through the
+        # mesh-sharded extension (same bucketing policy, sharded matmul).
+        self.extender = (extend.ShardedExtender(model, mesh, mesh_axis,
+                                                 self.block)
+                          if mesh is not None else None)
         self._pending: List[np.ndarray] = []
-        self.stats: Dict = {"queries": 0, "padded_queries": 0,
-                            "batches": 0, "bucket_hits": {}}
+        self.stats: Dict = {}
+        self.reset_stats()
+
+    def reset_stats(self) -> None:
+        """Zero the traffic counters (bucket_hits included — this also
+        resets the `executables` view, NOT the jit cache itself)."""
+        self.stats = {"queries": 0, "padded_queries": 0,
+                      "batches": 0, "bucket_hits": {}}
 
     # -- bucketed one-shot path ------------------------------------------
 
@@ -76,7 +88,17 @@ class MicroBatcher:
         bsz = bucket_size(w, self.min_bucket, self.max_bucket)
         padded = (chunk if w == bsz
                   else jnp.pad(chunk, ((0, 0), (0, bsz - w))))
-        lab, d2 = extend.assign(self.model, padded, self.block, self.fused)
+        if self.extender is not None:
+            # Sharded path: stripe width is baked into the one compiled
+            # sharded executable at ShardedExtender construction.
+            lab, d2 = self.extender.assign(padded, self.fused)
+        else:
+            # Narrow the gram stripe to the bucket: a bucket-8 request
+            # must not pay an n x block (e.g. 512-wide) kernel stripe.
+            # bsz is already pow-2-clamped, so stripe widths — and hence
+            # compiled executables — stay bounded by the bucket count.
+            lab, d2 = extend.assign(self.model, padded,
+                                    min(self.block, bsz), self.fused)
         self.stats["queries"] += w
         self.stats["padded_queries"] += bsz - w
         self.stats["batches"] += 1
@@ -86,13 +108,21 @@ class MicroBatcher:
 
     # -- coalescing request queue ----------------------------------------
 
-    def submit(self, Xq: jnp.ndarray) -> int:
-        """Enqueue one request of queries (p, b_i); returns its ticket."""
+    def validate_request(self, Xq) -> np.ndarray:
+        """Shape-check one request; returns it as float32 numpy.
+
+        Shared with AsyncBatcher (serve/scheduler.py) so both front doors
+        reject malformed requests identically, at submit time."""
+        Xq = np.asarray(Xq, np.float32)
         if Xq.ndim != 2 or Xq.shape[0] != self.model.spec.p \
                 or Xq.shape[1] < 1:
             raise ValueError(f"request must be (p={self.model.spec.p}, "
                              f"b>=1), got {Xq.shape}")
-        self._pending.append(np.asarray(Xq, np.float32))
+        return Xq
+
+    def submit(self, Xq: jnp.ndarray) -> int:
+        """Enqueue one request of queries (p, b_i); returns its ticket."""
+        self._pending.append(self.validate_request(Xq))
         return len(self._pending) - 1
 
     def drain(self) -> List[Tuple[np.ndarray, np.ndarray]]:

@@ -1,14 +1,25 @@
-"""Serving throughput measurement: assignments/sec per query batch size.
+"""Serving benchmarks: sync throughput, async latency percentiles, sharded.
 
-One warmup call per batch size pays the compile; timed calls then measure
-the steady-state bucketed path (the number the ROADMAP north star cares
-about). Results serialize to BENCH_serve.json:
+Three modes, all landing in BENCH_serve.json:
 
-    {"model": {...spec...},
-     "backend": "cpu",
+  sync     `benchmark_assign` — bucketed assignments/sec per batch size
+           through MicroBatcher (one warmup call per size pays compile);
+  async    `benchmark_async` — request traffic through AsyncBatcher with
+           deadline-driven flushing; reports the LatencyStats summary
+           (p50/p95/p99, queue wait, SLO violations) plus throughput;
+  sharded  either of the above with mesh= set — the extension matmul runs
+           through serve.extend.ShardedExtender on the given mesh.
+
+Schema (write_bench):
+
+    {"model": {...spec...}, "backend": "cpu",
      "batch_sizes": [...],
-     "results": [{"batch_size": b, "bucket": B, "calls": c,
-                  "wall_s": t, "assignments_per_sec": qps}, ...]}
+     "results": [{"batch_size": b, "bucket": B, "calls": c, "wall_s": t,
+                  "assignments_per_sec": qps}, ...],
+     "bucket_executables": [...],
+     "sharded": false | {"shards": s, "axis": "data"},
+     "async": {"max_wait_ms": ..., "wall_s": ..., "queries_per_sec": ...,
+               "latency": <LatencyStats.summary()>}}       # async mode only
 """
 from __future__ import annotations
 
@@ -19,9 +30,11 @@ from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.serve.artifact import FittedModel
 from repro.serve.batcher import MicroBatcher, bucket_size
+from repro.serve.scheduler import AsyncBatcher
 
 
 def benchmark_assign(model: FittedModel,
@@ -30,12 +43,15 @@ def benchmark_assign(model: FittedModel,
                      key: Optional[jax.Array] = None,
                      block: Optional[int] = None,
                      fused: Optional[bool] = None,
-                     max_bucket: int = 1024) -> Dict:
+                     max_bucket: int = 1024,
+                     mesh=None, mesh_axis: str = "data") -> Dict:
     """Drive synthetic query load through a MicroBatcher; returns the dict
-    documented in the module docstring."""
+    documented in the module docstring. mesh != None measures the
+    mesh-sharded extension path on the same bucketing policy."""
     key = key if key is not None else jax.random.PRNGKey(0)
     batcher = MicroBatcher(model, block=block, fused=fused,
-                           max_bucket=max_bucket)
+                           max_bucket=max_bucket, mesh=mesh,
+                           mesh_axis=mesh_axis)
     results = []
     for b in batch_sizes:
         Xq = jax.random.normal(key, (model.spec.p, b), jnp.float32)
@@ -59,7 +75,124 @@ def benchmark_assign(model: FittedModel,
         "batch_sizes": [int(b) for b in batch_sizes],
         "results": results,
         "bucket_executables": batcher.executables,
+        "sharded": ({"shards": batcher.extender.shards, "axis": mesh_axis}
+                    if mesh is not None else False),
     }
+
+
+def benchmark_async(model: FittedModel,
+                    n_requests: int = 256,
+                    width_range: Sequence[int] = (1, 64),
+                    max_wait_ms: float = 2.0,
+                    slo_ms: float = 250.0,
+                    key: Optional[jax.Array] = None,
+                    block: Optional[int] = None,
+                    fused: Optional[bool] = None,
+                    max_bucket: int = 1024,
+                    mesh=None, mesh_axis: str = "data") -> Dict:
+    """Request traffic through AsyncBatcher; returns latency percentiles.
+
+    Submits n_requests of uniformly random widths in width_range, polling
+    the deadline between submits (cooperative mode — the bench IS the
+    event loop, so numbers are not polluted by pump-thread jitter), then
+    flushes the tail. Every pow-2 bucket the traffic can hit is compiled
+    during a warmup pass first: steady-state percentiles, not compile
+    spikes, which on CPU would otherwise dominate p99 by ~3 orders of
+    magnitude.
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    rng = np.random.RandomState(
+        int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    lo, hi = int(width_range[0]), int(width_range[1])
+    widths = rng.randint(lo, hi + 1, size=n_requests)
+    queries = rng.randn(model.spec.p, int(widths.sum())).astype(np.float32)
+
+    async_batcher = AsyncBatcher(model, max_wait_ms=max_wait_ms,
+                                 slo_ms=slo_ms, block=block, fused=fused,
+                                 max_bucket=max_bucket, mesh=mesh,
+                                 mesh_axis=mesh_axis)
+    # Warmup: compile every bucket in [min_bucket, max_bucket] once.
+    bsz = async_batcher.batcher.min_bucket
+    while bsz <= max_bucket:
+        async_batcher.batcher.assign_batch(
+            jnp.zeros((model.spec.p, bsz), jnp.float32))
+        bsz *= 2
+    async_batcher.batcher.reset_stats()
+
+    futures = []
+    off = 0
+    t0 = time.perf_counter()
+    for w in widths:
+        futures.append(async_batcher.submit(queries[:, off:off + w]))
+        off += w
+        async_batcher.poll()
+    async_batcher.flush()
+    for fut in futures:
+        fut.result()                              # all resolved by flush
+    wall = time.perf_counter() - t0
+    total_q = int(widths.sum())
+    return {
+        "mode": "async",
+        "n_requests": int(n_requests),
+        "width_range": [lo, hi],
+        "max_wait_ms": float(max_wait_ms),
+        "wall_s": wall,
+        "queries_per_sec": total_q / wall,
+        "latency": async_batcher.latency.summary(),
+        "bucket_executables": async_batcher.batcher.executables,
+        "sharded": ({"shards": async_batcher.batcher.extender.shards,
+                     "axis": mesh_axis} if mesh is not None else False),
+    }
+
+
+def run_benches(model: FittedModel, modes: Sequence[str] = ("sync", "async"),
+                batch_sizes: Sequence[int] = (64, 512), repeats: int = 5,
+                key: Optional[jax.Array] = None,
+                block: Optional[int] = None, fused: Optional[bool] = None,
+                max_bucket: int = 1024,
+                mesh=None, mesh_axis: str = "data",
+                n_requests: int = 256, max_wait_ms: float = 2.0,
+                slo_ms: float = 250.0) -> Dict:
+    """Run the requested bench modes into ONE BENCH_serve.json dict.
+
+    The shared driver behind benchmarks/bench_serve.py and the
+    serve_cluster CLI: only the modes asked for run (and land in the
+    dict), so `modes=("async",)` pays no synchronous warmup/timing.
+    """
+    bench: Dict = {
+        "model": dataclasses.asdict(model.spec),
+        "backend": jax.default_backend(),
+        "sharded": ({"shards": dict(mesh.shape)[mesh_axis],
+                     "axis": mesh_axis} if mesh is not None else False),
+    }
+    if "sync" in modes:
+        bench.update(benchmark_assign(
+            model, batch_sizes=batch_sizes, repeats=repeats, key=key,
+            block=block, fused=fused, max_bucket=max_bucket, mesh=mesh,
+            mesh_axis=mesh_axis))
+    if "async" in modes:
+        bench["async"] = benchmark_async(
+            model, n_requests=n_requests, max_wait_ms=max_wait_ms,
+            slo_ms=slo_ms, key=key, block=block, fused=fused,
+            max_bucket=max_bucket, mesh=mesh, mesh_axis=mesh_axis)
+    return bench
+
+
+def format_bench(bench: Dict) -> str:
+    """Human-readable lines for a run_benches dict (CLI output)."""
+    lines = []
+    for row in bench.get("results", []):
+        lines.append(f"batch {row['batch_size']:>6d} "
+                     f"(bucket {row['bucket']:>5d}): "
+                     f"{row['assignments_per_sec']:>12.0f} assignments/sec")
+    if "async" in bench:
+        a = bench["async"]
+        lat = a["latency"]["latency_ms"]
+        lines.append(f"async: {a['queries_per_sec']:>12.0f} queries/sec  "
+                     f"p50 {lat['p50']:.2f} ms  p95 {lat['p95']:.2f} ms  "
+                     f"p99 {lat['p99']:.2f} ms  SLO violations "
+                     f"{a['latency']['slo_violations']}")
+    return "\n".join(lines)
 
 
 def write_bench(path: str, bench: Dict) -> str:

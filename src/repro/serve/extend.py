@@ -23,6 +23,16 @@ Assignment offers two paths: a pure-jnp distance argmin, and a fused path
 that reuses the Pallas kmeans_assign kernel (distance + argmin in VMEM, the
 (b, k) matrix never leaves the chip). On CPU the Pallas kernel runs in
 interpret mode, so the jnp path is the default there.
+
+Mesh-sharded path (`ShardedExtender`): the extension matmul
+Sigma^{-1/2} U^T kappa(X_train, x) is the serving-time hot loop, and it
+shards the same way the training pass does (distributed/cluster.py):
+X_train column-sharded and U row-sharded over the mesh's data axis, each
+device computing its n/shards x block stripe of the kernel against the
+replicated query block plus the matching partial projection, combined by
+ONE psum of the tiny (r, block) partials. Per-device kernel memory drops
+from n x block to n/shards x block and embedding throughput scales with
+device count; see docs/SERVING.md.
 """
 from __future__ import annotations
 
@@ -30,6 +40,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.kernels_fn import stripe_iterator
 from repro.core.kmeans import _sq_dists
@@ -90,3 +102,114 @@ def assign(model: FittedModel, Xq: jnp.ndarray,
     if fused:
         return assign_pallas(Yq, model.centroids)
     return _assign_jnp(Yq, model.centroids)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded extension
+# ---------------------------------------------------------------------------
+
+class ShardedExtender:
+    """Extension matmul sharded over a mesh axis, one psum per stripe.
+
+    Placement (fixed at construction, so steady-state serving never moves
+    training data again):
+
+        X_train (p, n_pad)  columns sharded P(None, axis)
+        U       (n_pad, r)  rows    sharded P(axis, None)
+        queries (p, block)  replicated per stripe
+
+    n is zero-padded up to a multiple of the shard count; padded U rows
+    are zero, so whatever kernel values the padded X_train columns produce
+    are annihilated by the projection (exact, not approximate — this is
+    why X_train's zero-padding is safe even for kernels with
+    kappa(0, x) != 0, e.g. rbf).
+
+    Per stripe each device materializes only its (n_pad/shards, block)
+    slab of kappa(X_train, x) and contracts it immediately into an
+    (r, block) partial; the single psum sums the partials. Communication
+    per stripe is r * block floats — independent of n.
+    """
+
+    def __init__(self, model: FittedModel, mesh, axis: str = "data",
+                 block: Optional[int] = None):
+        if axis not in mesh.axis_names:
+            raise ValueError(f"mesh has no axis {axis!r}; "
+                             f"have {mesh.axis_names}")
+        self.model = model
+        self.mesh = mesh
+        self.axis = axis
+        self.block = block or model.spec.block
+        self.shards = dict(mesh.shape)[axis]
+        n = model.spec.n
+        n_pad = -(-n // self.shards) * self.shards
+        Xt = model.X_train
+        U = model.U
+        if n_pad != n:
+            Xt = jnp.pad(Xt, ((0, 0), (0, n_pad - n)))
+            U = jnp.pad(U, ((0, n_pad - n), (0, 0)))
+        self._Xt = jax.device_put(Xt, NamedSharding(mesh, P(None, axis)))
+        self._U = jax.device_put(U, NamedSharding(mesh, P(axis, None)))
+        self._inv_sqrt = jnp.where(model.eigvals > _EIG_EPS,
+                                   1.0 / jnp.sqrt(model.eigvals), 0.0)
+        kern = model.kernel_fn()
+        block_w = self.block
+        ax = self.axis
+
+        @jax.jit
+        def stripe_embed(Xt_sh, U_sh, inv_sqrt, Xqp, start):
+            xb = jax.lax.dynamic_slice_in_dim(Xqp, start, block_w, axis=1)
+
+            def body(xl, ul, xbl):
+                stripe = kern(xl, xbl)                  # (n_local, block)
+                part = (inv_sqrt[:, None] * ul.T) @ stripe
+                return jax.lax.psum(part, ax)[None]     # (1, r, block)
+
+            out = shard_map(body, mesh=mesh,
+                            in_specs=(P(None, ax), P(ax, None),
+                                      P(None, None)),
+                            out_specs=P(ax, None, None),
+                            check_rep=False)(Xt_sh, U_sh, xb)
+            return out[0]                               # (r, block)
+
+        self._stripe_embed = stripe_embed
+
+    def embed(self, Xq: jnp.ndarray) -> jnp.ndarray:
+        """Embed Xq (p, b) -> (r, b), streaming query columns in stripes.
+
+        Same single-executable streaming discipline as the unsharded
+        `embed`: Xq is zero-padded to a column multiple of `block`, every
+        stripe (ragged tail included) runs the one jitted sharded
+        executable, and padded columns are sliced off at the end.
+        """
+        if Xq.shape[0] != self.model.spec.p:
+            raise ValueError(f"query dim {Xq.shape[0]} != model dim "
+                             f"{self.model.spec.p}")
+        b = Xq.shape[1]
+        block = self.block
+        b_pad = -(-b // block) * block
+        Xqp = (Xq if b_pad == b
+               else jnp.pad(Xq, ((0, 0), (0, b_pad - b))))
+        out = jnp.zeros((self.model.spec.r, b_pad), jnp.float32)
+        for start in range(0, b_pad, block):
+            yb = self._stripe_embed(self._Xt, self._U, self._inv_sqrt,
+                                    Xqp, jnp.asarray(start))
+            out = jax.lax.dynamic_update_slice(out, yb, (0, start))
+        return out[:, :b]
+
+    def assign(self, Xq: jnp.ndarray, fused: Optional[bool] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Sharded-embed then centroid argmin; mirrors `assign`."""
+        if fused is None:
+            fused = jax.default_backend() != "cpu"
+        Yq = self.embed(Xq).T                            # (b, r)
+        if fused:
+            return assign_pallas(Yq, self.model.centroids)
+        return _assign_jnp(Yq, self.model.centroids)
+
+
+def embed_sharded(model: FittedModel, Xq: jnp.ndarray, mesh,
+                  axis: str = "data",
+                  block: Optional[int] = None) -> jnp.ndarray:
+    """One-shot sharded embed (constructs a throwaway ShardedExtender;
+    serving paths should hold one and reuse its placement/executable)."""
+    return ShardedExtender(model, mesh, axis, block).embed(Xq)

@@ -1,0 +1,170 @@
+"""Streaming latency accounting for the async serving path (ROADMAP:
+"async request queue + latency SLO accounting in MicroBatcher").
+
+A serving process answers millions of requests; keeping every latency
+sample to compute percentiles is out of the question. `LatencyStats` keeps
+a *streaming histogram* instead: fixed log-spaced bucket edges spanning
+1 microsecond .. ~100 s, O(1) per sample, O(buckets) memory, and
+percentiles recovered by walking the cumulative counts with geometric
+interpolation inside the winning bucket (error bounded by the bucket
+ratio, ~9% with 16 buckets/decade — far below the run-to-run noise of any
+real latency distribution).
+
+Three timestamps bound every request's life (recorded by
+`serve.scheduler.AsyncBatcher`):
+
+    enqueue   submit() accepted the request
+    flush     the deadline/full-bucket trigger moved it into a batch
+    complete  results were scattered back and its future resolved
+
+from which two spans are tracked per request: queue wait
+(enqueue->flush) and total latency (enqueue->complete). An optional SLO
+threshold (`slo_ms`) turns the total-latency stream into a violation
+counter — the number every later PR (hot-swap, quantized artifacts)
+reports against.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+# Bucket edges: 16 buckets per decade from 1e-3 ms (1 us) to 1e5 ms (100 s),
+# i.e. ratio 10^(1/16) ~ 1.15 between edges. Samples outside the range clamp
+# to the first/last bucket.
+_LO_MS = 1e-3
+_HI_MS = 1e5
+_PER_DECADE = 16
+_N_BUCKETS = int(math.log10(_HI_MS / _LO_MS)) * _PER_DECADE
+
+
+def _bucket_index(ms: float) -> int:
+    if ms <= _LO_MS:
+        return 0
+    idx = int(math.log10(ms / _LO_MS) * _PER_DECADE)
+    return min(idx, _N_BUCKETS - 1)
+
+
+def _bucket_edges(idx: int) -> tuple:
+    lo = _LO_MS * 10.0 ** (idx / _PER_DECADE)
+    hi = _LO_MS * 10.0 ** ((idx + 1) / _PER_DECADE)
+    return lo, hi
+
+
+class Histogram:
+    """Fixed-edge log-spaced streaming histogram over milliseconds."""
+
+    def __init__(self):
+        self.counts: List[int] = [0] * _N_BUCKETS
+        self.n = 0
+        self.total = 0.0
+        self.min = math.inf
+        self.max = 0.0
+
+    def record(self, ms: float) -> None:
+        ms = max(float(ms), 0.0)
+        self.counts[_bucket_index(ms)] += 1
+        self.n += 1
+        self.total += ms
+        self.min = min(self.min, ms)
+        self.max = max(self.max, ms)
+
+    def percentile(self, q: float) -> float:
+        """q in [0, 100]. Geometric interpolation inside the bucket; the
+        observed min/max clamp the first/last occupied bucket so tiny
+        sample counts do not report a bucket edge nobody hit."""
+        if self.n == 0:
+            return 0.0
+        rank = q / 100.0 * self.n
+        seen = 0
+        for idx, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if seen + c >= rank:
+                lo, hi = _bucket_edges(idx)
+                lo = max(lo, self.min)
+                hi = min(hi, self.max)
+                if hi <= lo:
+                    return lo
+                frac = (rank - seen) / c
+                return lo * (hi / lo) ** frac
+            seen += c
+        return self.max
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+
+class LatencyStats:
+    """Per-request latency accounting: queue-wait + total histograms and an
+    SLO-violation counter.
+
+    slo_ms=None disables SLO accounting (violations stay 0)."""
+
+    def __init__(self, slo_ms: Optional[float] = None):
+        self.slo_ms = slo_ms
+        self.queue_wait = Histogram()
+        self.total = Histogram()
+        self.requests = 0
+        self.queries = 0
+        self.slo_violations = 0
+
+    def record(self, enqueue_ts: float, flush_ts: float, complete_ts: float,
+               queries: int = 1) -> None:
+        """Record one request's life from its three timestamps (seconds)."""
+        wait_ms = (flush_ts - enqueue_ts) * 1e3
+        total_ms = (complete_ts - enqueue_ts) * 1e3
+        self.queue_wait.record(wait_ms)
+        self.total.record(total_ms)
+        self.requests += 1
+        self.queries += int(queries)
+        if self.slo_ms is not None and total_ms > self.slo_ms:
+            self.slo_violations += 1
+
+    @property
+    def slo_violation_rate(self) -> float:
+        return self.slo_violations / self.requests if self.requests else 0.0
+
+    def summary(self) -> Dict:
+        """JSON-ready summary — the schema BENCH_serve.json's async mode
+        embeds (see docs/SERVING.md, "SLO metrics glossary")."""
+        t, w = self.total, self.queue_wait
+        return {
+            "requests": self.requests,
+            "queries": self.queries,
+            "latency_ms": {
+                "p50": t.percentile(50.0),
+                "p95": t.percentile(95.0),
+                "p99": t.percentile(99.0),
+                "mean": t.mean,
+                "max": t.max if t.n else 0.0,
+            },
+            "queue_wait_ms": {
+                "p50": w.percentile(50.0),
+                "p95": w.percentile(95.0),
+                "p99": w.percentile(99.0),
+            },
+            "slo_ms": self.slo_ms,
+            "slo_violations": self.slo_violations,
+            "slo_violation_rate": self.slo_violation_rate,
+        }
+
+    def format_table(self) -> str:
+        """Human-readable latency table (printed by serve_cluster --bench
+        and examples/serve_async.py)."""
+        s = self.summary()
+        lines = [
+            f"{'requests':>14s}: {s['requests']}",
+            f"{'queries':>14s}: {s['queries']}",
+            f"{'p50':>14s}: {s['latency_ms']['p50']:10.3f} ms",
+            f"{'p95':>14s}: {s['latency_ms']['p95']:10.3f} ms",
+            f"{'p99':>14s}: {s['latency_ms']['p99']:10.3f} ms",
+            f"{'mean':>14s}: {s['latency_ms']['mean']:10.3f} ms",
+            f"{'max':>14s}: {s['latency_ms']['max']:10.3f} ms",
+            f"{'queue-wait p95':>14s}: {s['queue_wait_ms']['p95']:10.3f} ms",
+        ]
+        if self.slo_ms is not None:
+            lines.append(f"{'SLO':>14s}: {self.slo_ms:g} ms, "
+                         f"{self.slo_violations} violations "
+                         f"({100.0 * self.slo_violation_rate:.2f}%)")
+        return "\n".join(lines)

@@ -1,9 +1,12 @@
 """Multi-model registry: one process serves several fitted models by name.
 
-A registry row owns the FittedModel and lazily a MicroBatcher per model, so
-`registry.batcher("segmentation").assign_batch(Xq)` is the whole serving
-call. Loading is artifact-directory based; registering the same name twice
-requires overwrite=True to avoid silently hot-swapping a live model.
+A registry row owns the FittedModel and lazily a MicroBatcher (sync) and
+an AsyncBatcher (async, SLO-accounted) per model, so
+`registry.batcher("segmentation").assign_batch(Xq)` or
+`registry.scheduler("segmentation").submit(Xq)` is the whole serving
+call, and `registry.latency_summary("segmentation")` is the monitoring
+read-out. Loading is artifact-directory based; registering the same name
+twice requires overwrite=True to avoid silently hot-swapping a live model.
 """
 from __future__ import annotations
 
@@ -11,12 +14,14 @@ from typing import Dict, List
 
 from repro.serve.artifact import FittedModel, load_model, save_model
 from repro.serve.batcher import MicroBatcher
+from repro.serve.scheduler import AsyncBatcher
 
 
 class ModelRegistry:
     def __init__(self):
         self._models: Dict[str, FittedModel] = {}
         self._batchers: Dict[str, MicroBatcher] = {}
+        self._schedulers: Dict[str, AsyncBatcher] = {}
 
     def register(self, name: str, model: FittedModel,
                  overwrite: bool = False) -> FittedModel:
@@ -25,6 +30,7 @@ class ModelRegistry:
                              f"(overwrite=True to replace)")
         self._models[name] = model
         self._batchers.pop(name, None)
+        self._drop_scheduler(name)
         return model
 
     def get(self, name: str) -> FittedModel:
@@ -35,6 +41,13 @@ class ModelRegistry:
     def unregister(self, name: str) -> None:
         self._models.pop(name, None)
         self._batchers.pop(name, None)
+        self._drop_scheduler(name)
+
+    def _drop_scheduler(self, name: str) -> None:
+        """Stop + flush a model's AsyncBatcher so no future is orphaned."""
+        sched = self._schedulers.pop(name, None)
+        if sched is not None:
+            sched.stop()
 
     def names(self) -> List[str]:
         return sorted(self._models)
@@ -54,6 +67,25 @@ class ModelRegistry:
         if name not in self._batchers:
             self._batchers[name] = MicroBatcher(self.get(name), **kwargs)
         return self._batchers[name]
+
+    def scheduler(self, name: str, **kwargs) -> AsyncBatcher:
+        """Per-model AsyncBatcher, cached so its LatencyStats accumulate
+        across callers (the SLO read-out is per model, not per client).
+
+        kwargs are only honoured on first construction for a given name;
+        the caller owns start()/stop() of the pump thread.
+        """
+        if name not in self._schedulers:
+            self._schedulers[name] = AsyncBatcher(self.get(name), **kwargs)
+        return self._schedulers[name]
+
+    def latency_summary(self, name: str) -> Dict:
+        """LatencyStats summary of a model's async path (see
+        serve/latency.py); raises KeyError until scheduler(name) exists."""
+        if name not in self._schedulers:
+            raise KeyError(f"no async scheduler for {name!r}; call "
+                           f"scheduler({name!r}) first")
+        return self._schedulers[name].latency.summary()
 
 
 # Process-wide default registry (what the serve_cluster CLI drives).

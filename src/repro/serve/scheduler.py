@@ -1,0 +1,225 @@
+"""Async SLO-aware request scheduling: futures + deadline-driven flush.
+
+This is the ROADMAP item "async request queue + latency SLO accounting in
+MicroBatcher". `MicroBatcher.drain()` is synchronous and deterministic by
+design — every caller blocks until the whole coalesced batch runs.
+`AsyncBatcher` keeps that exact compute path (flushes are literally
+`MicroBatcher.submit()* + drain()`, so results are bit-identical by
+construction) and puts a latency-aware front door on it:
+
+    submit(Xq) -> Future     returns immediately; the request joins the
+                             pending window and its enqueue timestamp is
+                             taken
+    flush trigger            whichever fires first:
+                               - the pending window reaches max_bucket
+                                 query columns (a full steady-state batch
+                                 is ready -> flushing now costs nothing),
+                                 checked at submit time;
+                               - the OLDEST pending request has waited
+                                 max_wait_ms (the latency deadline),
+                                 checked by poll()/the pump thread.
+    completion               the flushed batch runs through the bucketed
+                             assignment path; each request's Future
+                             resolves to its (labels, d2) slice and its
+                             enqueue->flush->complete timestamps land in
+                             a LatencyStats (serve/latency.py)
+
+Determinism: all scheduling state lives behind one lock and the clock is
+injectable, so tests drive deadline semantics with a fake clock and
+explicit poll() calls — no sleeps, no flaky timing. A background pump
+thread (`start()`/`stop()`, or the context manager) is available for real
+deployments where nobody polls.
+
+Batch membership does not affect results: query columns are independent
+through the whole extension matmul and the bucketed path pads to the same
+pow-2 widths regardless of how requests were grouped (see
+serve/batcher.py), so any interleaving of flushes yields the same labels
+as one big drain. tests/test_scheduler.py pins this.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.artifact import FittedModel
+from repro.serve.batcher import MicroBatcher
+from repro.serve.latency import LatencyStats
+
+
+class _Pending(NamedTuple):
+    """One queued request: payload + future + its enqueue timestamp."""
+    Xq: np.ndarray
+    future: Future
+    enqueue_ts: float
+
+
+class AsyncBatcher:
+    """Deadline-driven async front door over MicroBatcher's bucketed path.
+
+    max_wait_ms: latency deadline — the longest any request may sit in the
+        pending window before a flush is forced. Lower = lower p99, less
+        coalescing; higher = bigger batches, better throughput.
+    slo_ms: end-to-end latency SLO recorded per request (None disables).
+    clock: monotonic-seconds callable; injectable for deterministic tests.
+    Remaining kwargs (block, min_bucket, max_bucket, fused, mesh,
+    mesh_axis) go straight to the inner MicroBatcher.
+    """
+
+    def __init__(self, model: FittedModel, *, max_wait_ms: float = 5.0,
+                 slo_ms: Optional[float] = None,
+                 clock=time.monotonic, latency: Optional[LatencyStats] = None,
+                 **batcher_kwargs):
+        self.batcher = MicroBatcher(model, **batcher_kwargs)
+        self.max_wait_ms = float(max_wait_ms)
+        self.clock = clock
+        self.latency = latency if latency is not None \
+            else LatencyStats(slo_ms=slo_ms)
+        self._queue: List[_Pending] = []
+        self._lock = threading.Lock()         # guards the pending window
+        self._flush_lock = threading.Lock()   # serializes inner drains
+        self._thread: Optional[threading.Thread] = None
+        self._stop_event = threading.Event()
+        # Pump-thread health: a flush that raises has already delivered
+        # the exception to that batch's futures; the pump must survive to
+        # serve later requests. Counter + last error are the monitoring
+        # surface.
+        self.pump_errors = 0
+        self.last_pump_error: Optional[BaseException] = None
+
+    # -- request side ----------------------------------------------------
+
+    def submit(self, Xq) -> "Future[Tuple[np.ndarray, np.ndarray]]":
+        """Enqueue one (p, b) request; resolves to (labels (b,), d2 (b,)).
+
+        Flushes inline when this submit fills the window to max_bucket —
+        the full-batch trigger — so a saturating client never waits on the
+        deadline.
+        """
+        Xq = self.batcher.validate_request(Xq)
+        fut: Future = Future()
+        with self._lock:
+            self._queue.append(_Pending(Xq, fut, self.clock()))
+            full = self._pending_width_locked() >= self.batcher.max_bucket
+        if full:
+            self.flush()
+        return fut
+
+    def _pending_width_locked(self) -> int:
+        return sum(p.Xq.shape[1] for p in self._queue)
+
+    @property
+    def pending_requests(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    @property
+    def pending_width(self) -> int:
+        """Total query columns currently waiting for a flush."""
+        with self._lock:
+            return self._pending_width_locked()
+
+    # -- flush side ------------------------------------------------------
+
+    def due(self, now: Optional[float] = None) -> bool:
+        """True when the oldest pending request has hit the deadline."""
+        now = self.clock() if now is None else now
+        with self._lock:
+            if not self._queue:
+                return False
+            return (now - self._queue[0].enqueue_ts) * 1e3 \
+                >= self.max_wait_ms
+
+    def poll(self) -> int:
+        """Flush if the deadline trigger fires; returns requests completed.
+
+        This is the cooperative scheduling entry point: an event loop (or
+        test) calls poll() at whatever cadence it likes; the pump thread
+        is just poll() in a loop.
+        """
+        return self.flush() if self.due() else 0
+
+    def flush(self) -> int:
+        """Run all pending requests now; returns requests completed.
+
+        The batch is handed to the inner MicroBatcher exactly as drain()
+        would see it, so async results are bit-identical to a synchronous
+        drain of the same requests. Futures resolve in submission order;
+        on compute failure every future in the batch carries the
+        exception instead of the batch dying silently.
+        """
+        with self._flush_lock:
+            with self._lock:
+                batch, self._queue = self._queue, []
+            if not batch:
+                return 0
+            flush_ts = self.clock()
+            try:
+                for p in batch:
+                    self.batcher.submit(p.Xq)
+                results = self.batcher.drain()
+            except Exception as exc:                 # pragma: no cover
+                for p in batch:
+                    p.future.set_exception(exc)
+                raise
+            # drain() must return exactly one result per request handed
+            # to it; a mismatch means something enqueued on the inner
+            # batcher directly and a silent zip would scatter results to
+            # the wrong futures.
+            if len(results) != len(batch):           # pragma: no cover
+                exc = RuntimeError(
+                    f"flush expected {len(batch)} results, drained "
+                    f"{len(results)}: the inner MicroBatcher had foreign "
+                    f"pending requests")
+                for p in batch:
+                    p.future.set_exception(exc)
+                raise exc
+            complete_ts = self.clock()
+            # LatencyStats mutation stays inside the flush lock: record()
+            # is read-modify-write on histogram counts, and a pump-thread
+            # flush can overlap a submit-triggered inline flush.
+            for p in batch:
+                self.latency.record(p.enqueue_ts, flush_ts, complete_ts,
+                                    queries=p.Xq.shape[1])
+        for p, res in zip(batch, results):
+            p.future.set_result(res)
+        return len(batch)
+
+    # -- background pump -------------------------------------------------
+
+    def start(self) -> "AsyncBatcher":
+        """Spawn the daemon pump thread (poll() every max_wait_ms / 4)."""
+        if self._thread is not None:
+            raise RuntimeError("pump thread already running")
+        self._stop_event.clear()
+
+        def pump():
+            period = max(self.max_wait_ms / 4e3, 1e-4)
+            while not self._stop_event.wait(period):
+                try:
+                    self.poll()
+                except Exception as exc:   # batch futures carry the error
+                    self.pump_errors += 1
+                    self.last_pump_error = exc
+
+        self._thread = threading.Thread(target=pump, daemon=True,
+                                        name="AsyncBatcher-pump")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop the pump thread and flush whatever is still pending."""
+        if self._thread is not None:
+            self._stop_event.set()
+            self._thread.join()
+            self._thread = None
+        self.flush()
+
+    def __enter__(self) -> "AsyncBatcher":
+        return self.start()
+
+    def __exit__(self, *exc_info) -> None:
+        self.stop()

@@ -1,3 +1,6 @@
 from repro.train.optimizer import adamw_init, adamw_update, AdamWConfig
 from repro.train.steps import (make_train_step, make_prefill_step,
                                make_decode_step, cross_entropy, TrainState)
+__all__ = ["adamw_init", "adamw_update", "AdamWConfig",
+           "make_train_step", "make_prefill_step", "make_decode_step",
+           "cross_entropy", "TrainState"]

@@ -9,7 +9,6 @@ make_train_step builds a pure (state, batch) -> (state, metrics) function:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax

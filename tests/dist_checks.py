@@ -161,8 +161,48 @@ def check_distributed_clustering():
           f"(exact {err_exact:.3f}) acc={acc:.3f}")
 
 
+def check_sharded_extend():
+    """Serving-side sharded extension (serve.extend.ShardedExtender)
+    matches the single-device path to fp32 tolerance, end to end through
+    MicroBatcher(mesh=) and AsyncBatcher, on ragged n (250 pads to 256
+    over 8 shards)."""
+    from repro.data import blob_ring
+    from repro.serve import (AsyncBatcher, MicroBatcher, ShardedExtender,
+                             assign, embed, fit_model)
+
+    mesh = jax.make_mesh((8,), ("data",))
+    X, _ = blob_ring(jax.random.PRNGKey(0), n=250)
+    Xq = jax.random.normal(jax.random.PRNGKey(2), (2, 101)) * 1.5
+    # rbf included: kappa(0, x) != 0, so this exercises the zero-row-U
+    # padding argument, not just harmless zero kernel columns.
+    for kernel, params, r in (("polynomial", {"gamma": 0.0, "degree": 2}, 2),
+                              ("rbf", {"gamma": 1.0}, 4)):
+        m = fit_model(jax.random.PRNGKey(1), X, k=2, r=r, kernel=kernel,
+                      kernel_params=params, oversampling=10, block=64)
+        ext = ShardedExtender(m, mesh)
+        Ys, Y1 = ext.embed(Xq), embed(m, Xq)
+        rel = (float(jnp.linalg.norm(Ys - Y1)) /
+               max(float(jnp.linalg.norm(Y1)), 1e-30))
+        assert rel <= 1e-5, (kernel, rel)
+        lab1, _ = assign(m, Xq)
+        labs, _ = ext.assign(Xq)
+        assert np.array_equal(np.asarray(lab1), np.asarray(labs)), kernel
+        # whole serving stack on the sharded path: bucketed sync + async.
+        mb = MicroBatcher(m, max_bucket=64, mesh=mesh)
+        lab_b, _ = mb.assign_batch(Xq)
+        assert np.array_equal(lab_b, np.asarray(lab1)), kernel
+        ab = AsyncBatcher(m, max_wait_ms=5.0, max_bucket=64, mesh=mesh)
+        futs = [ab.submit(np.asarray(Xq[:, i:i + 25]))
+                for i in range(0, 101, 25)]
+        ab.flush()
+        lab_a = np.concatenate([f.result()[0] for f in futs])
+        assert np.array_equal(lab_a, np.asarray(lab1)), kernel
+    print("sharded_extend ok")
+
+
 if __name__ == "__main__":
     check_distributed_clustering()
+    check_sharded_extend()
     check_distributed_fwht()
     check_dfwht_on_2d_mesh()
     check_sketched_allreduce_pmean()

@@ -1,6 +1,4 @@
 """Checkpoint save/restore: atomicity, retention, async, resharding API."""
-import json
-import pathlib
 
 import jax
 import jax.numpy as jnp

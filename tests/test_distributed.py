@@ -5,7 +5,6 @@ import pathlib
 import subprocess
 import sys
 
-import pytest
 
 
 def test_distributed_checks():

@@ -1,8 +1,6 @@
 """Fault-tolerance control flow: heartbeats, stragglers, elastic re-mesh,
 checkpoint/restart supervision (process-level simulation)."""
-import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.distributed.fault import (HeartbeatMonitor, StragglerTracker,

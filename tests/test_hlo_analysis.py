@@ -1,10 +1,9 @@
 """Validate the trip-count-aware HLO analyzer on hand-computable programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.launch.hlo_analysis import analyze, parse_hlo, computation_weights
+from repro.launch.hlo_analysis import analyze
 
 
 def _compile_text(f, *args):
@@ -53,7 +52,6 @@ def test_nested_scans_multiply():
 
 
 def test_collectives_weighted_by_trips():
-    import os
     if jax.device_count() < 4:
         pytest.skip("needs >= 4 devices (run under dryrun env)")
 
@@ -75,6 +73,32 @@ def test_grad_through_scan_counts_forward_and_backward():
     fwd = L * 2 * 8 * 16 * 16
     assert res["flops"] > 2.5 * fwd, (res["flops"], fwd)
     assert res["flops"] < 4.0 * fwd, (res["flops"], fwd)
+
+
+def test_cond_branch_traffic_counted():
+    """lax.cond branch bodies run at top level: their HBM traffic must be
+    counted, not treated as fusion-internal (the pre-fix behaviour counted
+    ~0 bytes for the branches)."""
+    def f(pred, x):
+        return jax.lax.cond(pred,
+                            lambda v: jnp.tanh(v @ v) * 2.0,
+                            lambda v: (v @ v) * 0.5 - 3.0, x)
+
+    p = jax.ShapeDtypeStruct((), jnp.bool_)
+    x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    txt = _compile_text(f, p, x)
+    assert "conditional(" in txt, "cond not lowered to conditional; " \
+        "pick a bigger body"
+    res = analyze(txt)
+    # Each branch holds one 512x512 dot (read 2 operands + write out =
+    # 3 MB) plus an elementwise fusion; two branches >= ~6 MB of branch
+    # traffic on top of the entry. The old analyzer reported < 1.1 MB
+    # (entry-computation tuple plumbing only).
+    mb = 512 * 512 * 4
+    assert res["traffic_bytes"] >= 6 * mb, res["traffic_bytes"]
+    # FLOPs of the two branch dots are counted too (weight 1 each).
+    want_flops = 2 * 2 * 512 ** 3
+    assert abs(res["flops"] - want_flops) / want_flops < 0.05, res["flops"]
 
 
 def test_traffic_scales_with_trip_count():

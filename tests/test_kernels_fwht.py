@@ -37,7 +37,6 @@ def test_fwht_unnormalized():
 
 def test_fwht_two_level_equals_one_level():
     """The H_a (x) H_b factorization must agree with single-level exactly."""
-    from repro.kernels.fwht import ops
     x = jax.random.normal(jax.random.PRNGKey(2), (1 << 14, 2))
     got = np.asarray(fwht_pallas(x, interpret=True))
     want = np.asarray(fwht_ref(x))

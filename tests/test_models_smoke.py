@@ -7,8 +7,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models.registry import get_api
-from repro.train.steps import (make_train_step, make_decode_step,
-                               init_train_state, cross_entropy)
+from repro.train.steps import make_train_step, init_train_state
 from repro.launch import specs
 
 SMOKE_SEQ = 32

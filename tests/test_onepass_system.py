@@ -1,6 +1,5 @@
 """Integration tests: the full Alg. 1 pipeline against paper-level claims."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

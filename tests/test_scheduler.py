@@ -1,0 +1,273 @@
+"""AsyncBatcher + LatencyStats: deadline semantics, future resolution,
+SLO accounting, async==sync bit-identity. All timing is driven by a fake
+clock — no sleeps, no flakes."""
+import jax
+import numpy as np
+import pytest
+
+from repro.data import blob_ring
+from repro.serve import (AsyncBatcher, LatencyStats, MicroBatcher,
+                         ModelRegistry, fit_model)
+
+N, P, R, K, BLOCK = 250, 2, 2, 2, 64
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+@pytest.fixture(scope="module")
+def model():
+    X, _ = blob_ring(jax.random.PRNGKey(0), n=N)
+    return fit_model(jax.random.PRNGKey(1), X, k=K, r=R,
+                     kernel="polynomial",
+                     kernel_params={"gamma": 0.0, "degree": 2},
+                     oversampling=10, block=BLOCK)
+
+
+def _requests(widths, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randn(P, w).astype(np.float32) for w in widths]
+
+
+# ---------------------------------------------------------------------------
+# deadline / full-bucket flush triggers
+# ---------------------------------------------------------------------------
+
+def test_deadline_flush_fires_on_oldest_request(model):
+    clock = FakeClock()
+    ab = AsyncBatcher(model, max_wait_ms=5.0, clock=clock, max_bucket=128)
+    ab.submit(_requests([3])[0])
+    clock.advance_ms(3.0)
+    ab.submit(_requests([4])[0])          # younger request, 3 ms later
+    assert not ab.due()
+    assert ab.poll() == 0                 # nothing due yet
+    clock.advance_ms(2.0)                 # oldest hits 5 ms; youngest at 2
+    assert ab.due()
+    assert ab.poll() == 2                 # deadline of the OLDEST flushes all
+    assert ab.pending_requests == 0
+    assert not ab.due()                   # empty queue is never due
+
+
+def test_full_bucket_flushes_inline_without_deadline(model):
+    clock = FakeClock()
+    ab = AsyncBatcher(model, max_wait_ms=1e6, clock=clock, max_bucket=64)
+    futs = [ab.submit(r) for r in _requests([30, 30])]
+    assert ab.pending_requests == 2       # 60 < 64: still pending
+    assert not futs[0].done()
+    futs.append(ab.submit(_requests([10], seed=1)[0]))  # 70 >= 64: flush
+    assert ab.pending_requests == 0
+    assert all(f.done() for f in futs)
+
+
+def test_flush_resolves_futures_in_submission_order(model):
+    clock = FakeClock()
+    ab = AsyncBatcher(model, max_wait_ms=5.0, clock=clock, max_bucket=512)
+    reqs = _requests([7, 33, 1, 49, 11])
+    futs = [ab.submit(r) for r in reqs]
+    assert ab.flush() == 5
+    for r, f in zip(reqs, futs):
+        labels, d2 = f.result(timeout=0)
+        assert labels.shape == (r.shape[1],)
+        assert d2.shape == (r.shape[1],)
+
+
+def test_future_resolution_under_out_of_order_drains(model):
+    """Requests flushed in separate rounds resolve to exactly their own
+    slices, and reading futures in reverse order changes nothing."""
+    clock = FakeClock()
+    ab = AsyncBatcher(model, max_wait_ms=5.0, clock=clock, max_bucket=512)
+    reqs = _requests([5, 17, 9, 2])
+    f0 = ab.submit(reqs[0])
+    f1 = ab.submit(reqs[1])
+    ab.flush()                            # round 1: reqs 0, 1
+    f2 = ab.submit(reqs[2])
+    f3 = ab.submit(reqs[3])
+    ab.flush()                            # round 2: reqs 2, 3
+    sync = MicroBatcher(model, max_bucket=512)
+    for r in reqs:
+        sync.submit(r)
+    want = sync.drain()
+    for f, (wl, wd) in zip([f3, f2, f1, f0], list(reversed(want))):
+        labels, d2 = f.result(timeout=0)
+        assert np.array_equal(labels, wl)
+        assert np.array_equal(d2, wd)
+
+
+# ---------------------------------------------------------------------------
+# async == sync bit-identity
+# ---------------------------------------------------------------------------
+
+def test_async_bit_identical_to_sync_drain(model):
+    reqs = _requests([7, 33, 1, 49, 11], seed=3)
+    clock = FakeClock()
+    ab = AsyncBatcher(model, max_wait_ms=5.0, clock=clock, max_bucket=64)
+    futs = [ab.submit(r) for r in reqs]
+    ab.flush()
+    sync = MicroBatcher(model, max_bucket=64)
+    for r in reqs:
+        sync.submit(r)
+    want = sync.drain()
+    for f, (wl, wd) in zip(futs, want):
+        labels, d2 = f.result(timeout=0)
+        assert np.array_equal(labels, wl), "async labels != sync drain"
+        assert np.array_equal(d2, wd), "async distances != sync drain"
+
+
+def test_interleaved_flushes_keep_labels(model):
+    """Flush partitioning cannot change labels: one-flush-per-request
+    equals one big drain."""
+    reqs = _requests([9, 14, 3], seed=4)
+    clock = FakeClock()
+    ab = AsyncBatcher(model, max_wait_ms=5.0, clock=clock, max_bucket=64)
+    futs = []
+    for r in reqs:
+        futs.append(ab.submit(r))
+        ab.flush()                        # worst case: no coalescing at all
+    sync = MicroBatcher(model, max_bucket=64)
+    for r in reqs:
+        sync.submit(r)
+    want = sync.drain()
+    for f, (wl, _) in zip(futs, want):
+        assert np.array_equal(f.result(timeout=0)[0], wl)
+
+
+# ---------------------------------------------------------------------------
+# SLO accounting
+# ---------------------------------------------------------------------------
+
+def test_slo_counter_exact_with_fake_clock(model):
+    clock = FakeClock()
+    ab = AsyncBatcher(model, max_wait_ms=100.0, slo_ms=5.0, clock=clock,
+                      max_bucket=512)
+    ab.submit(_requests([4])[0])
+    ab.flush()                            # waited 0 ms: inside SLO
+    ab.submit(_requests([6])[0])
+    clock.advance_ms(10.0)
+    ab.flush()                            # waited 10 ms: violation
+    ab.submit(_requests([2])[0])
+    clock.advance_ms(4.0)
+    ab.flush()                            # waited 4 ms: inside SLO
+    lat = ab.latency
+    assert lat.requests == 3
+    assert lat.queries == 12
+    assert lat.slo_violations == 1
+    assert lat.slo_violation_rate == pytest.approx(1.0 / 3.0)
+    s = lat.summary()
+    assert s["slo_ms"] == 5.0
+    assert s["latency_ms"]["max"] == pytest.approx(10.0)
+
+
+def test_latency_timestamps_split_wait_and_total(model):
+    """enqueue->flush lands in queue_wait; enqueue->complete in total."""
+    class ComputeClock(FakeClock):
+        """Advance 7 ms every read after the first, imitating compute."""
+        def __init__(self):
+            super().__init__()
+            self.reads = 0
+
+        def __call__(self):
+            self.reads += 1
+            if self.reads > 2:            # submit + flush_ts reads free
+                self.t += 7e-3
+            return self.t
+
+    clock = ComputeClock()
+    ab = AsyncBatcher(model, max_wait_ms=100.0, clock=clock, max_bucket=512)
+    ab.submit(_requests([3])[0])
+    ab.flush()
+    assert ab.latency.total.max >= ab.latency.queue_wait.max
+
+
+def test_registry_scheduler_cached_and_summarized(model):
+    reg = ModelRegistry()
+    reg.register("m", model)
+    clock = FakeClock()
+    s1 = reg.scheduler("m", max_wait_ms=2.0, slo_ms=50.0, clock=clock)
+    s2 = reg.scheduler("m", max_wait_ms=999.0)   # kwargs ignored: cached
+    assert s1 is s2
+    with pytest.raises(KeyError):
+        reg.latency_summary("other")
+    f = s1.submit(_requests([5])[0])
+    s1.flush()
+    f.result(timeout=0)
+    assert reg.latency_summary("m")["requests"] == 1
+    reg.unregister("m")                   # stops + flushes the scheduler
+
+
+def test_submit_validates_shape(model):
+    ab = AsyncBatcher(model, clock=FakeClock())
+    with pytest.raises(ValueError):
+        ab.submit(np.zeros((P, 0), np.float32))
+    with pytest.raises(ValueError):
+        ab.submit(np.zeros((P + 1, 4), np.float32))
+
+
+def test_flush_rejects_foreign_inner_requests(model):
+    """Requests enqueued directly on the inner MicroBatcher must not be
+    silently zipped onto the async futures."""
+    ab = AsyncBatcher(model, clock=FakeClock(), max_bucket=512)
+    ab.batcher.submit(_requests([3])[0])     # foreign: bypasses futures
+    fut = ab.submit(_requests([5])[0])
+    with pytest.raises(RuntimeError, match="foreign"):
+        ab.flush()
+    with pytest.raises(RuntimeError):
+        fut.result(timeout=0)                # future carries the error
+
+
+def test_pump_thread_survives_flush_errors(model):
+    """A poisoned batch must not kill the pump thread: its futures carry
+    the exception and later requests still get served."""
+    ab = AsyncBatcher(model, max_wait_ms=1.0, max_bucket=512)
+    with ab:
+        ab.batcher.submit(_requests([3])[0])       # poison: foreign req
+        bad = ab.submit(_requests([5])[0])
+        with pytest.raises(RuntimeError):
+            bad.result(timeout=30.0)
+        good = ab.submit(_requests([4])[0])        # pump must still run
+        labels, _ = good.result(timeout=30.0)
+    assert labels.shape == (4,)
+    assert ab.pump_errors >= 1
+    assert isinstance(ab.last_pump_error, RuntimeError)
+
+
+def test_pump_thread_flushes_on_deadline(model):
+    """Real-clock smoke of the background pump: a submitted request
+    resolves without any explicit poll/flush."""
+    with AsyncBatcher(model, max_wait_ms=1.0, max_bucket=512) as ab:
+        fut = ab.submit(_requests([4])[0])
+        labels, d2 = fut.result(timeout=30.0)
+    assert labels.shape == (4,)
+    assert ab.latency.requests == 1
+
+
+# ---------------------------------------------------------------------------
+# LatencyStats / Histogram unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_histogram_percentiles_bracket_true_quantiles():
+    stats = LatencyStats()
+    vals = np.linspace(1.0, 100.0, 1000)          # ms
+    for v in vals:
+        stats.record(0.0, 0.0, v / 1e3, queries=1)
+    for q, true in ((50.0, 50.5), (95.0, 95.05), (99.0, 99.01)):
+        got = stats.total.percentile(q)
+        assert true / 1.2 <= got <= true * 1.2, (q, got, true)
+    assert stats.total.percentile(0.0) <= vals[0] * 1.2
+    assert stats.total.percentile(100.0) == pytest.approx(100.0, rel=0.2)
+
+
+def test_histogram_empty_and_clamped():
+    stats = LatencyStats(slo_ms=1.0)
+    assert stats.total.percentile(99.0) == 0.0
+    assert stats.summary()["latency_ms"]["max"] == 0.0
+    stats.record(0.0, 0.0, 1e9, queries=1)        # way past the last bucket
+    assert stats.slo_violations == 1
+    assert stats.total.percentile(50.0) >= 1e7    # clamps, does not crash

@@ -7,7 +7,6 @@ import pytest
 from repro.core import (fwht, make_srht, srht_apply, srht_apply_t, next_pow2,
                         randomized_eig, sketch_stream, polynomial_kernel,
                         rbf_kernel, gram_matrix, exact_eig_from_gram)
-from repro.core.sketch import make_gaussian, one_pass_core
 from repro.data import gaussian_blobs
 
 

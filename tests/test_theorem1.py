@@ -16,7 +16,7 @@ except ImportError:          # pragma: no cover - hypothesis is installed
     HAVE_HYPOTHESIS = False
 
 from repro.core import (objective_from_labels, brute_force_optimal,
-                        theorem1_bounds, best_rank_r, trace_norm)
+                        theorem1_bounds, best_rank_r)
 
 
 def random_psd(rng, n, rank):
