@@ -5,7 +5,13 @@ Fits a model on synthetic blob+ring data, then measures:
   --mode sync     bucketed assignments/sec per batch size (MicroBatcher)
   --mode async    request latency p50/p95/p99 + SLO accounting through
                   the deadline-driven AsyncBatcher
-  --mode all      both (default)
+  --mode fused    fused gram->projection Pallas stripe vs the two-pass
+                  gram+projection executables, plus the per-stripe HBM
+                  delta from launch/hlo_analysis
+  --mode all      all of the above (default)
+
+--fused-embed on --interpret forces the Pallas stripe engine for the
+sync/async modes even on CPU (interpret mode) — the CI hook.
 
 Add --sharded to run the extension matmul mesh-sharded over all local
 devices (set XLA_FLAGS=--xla_force_host_platform_device_count=8 to fake a
@@ -31,7 +37,16 @@ def main():
     ap.add_argument("--block", type=int, default=512)
     ap.add_argument("--batch-sizes", default="64,512")
     ap.add_argument("--repeats", type=int, default=5)
-    ap.add_argument("--mode", default="all", choices=["sync", "async", "all"])
+    ap.add_argument("--mode", default="all",
+                    choices=["sync", "async", "fused", "all"])
+    ap.add_argument("--fused-embed", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="extension stripe engine for sync/async modes: "
+                         "fused Pallas (on), two-pass (off), or the "
+                         "backend default (auto)")
+    ap.add_argument("--interpret", action="store_true",
+                    help="run Pallas kernels in interpret mode (forces "
+                         "the Pallas path on CPU)")
     ap.add_argument("--async-requests", type=int, default=256)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--slo-ms", type=float, default=250.0)
@@ -56,11 +71,15 @@ def main():
             ap.error(f"--sharded needs >= 2 devices, have {n_dev}")
         mesh = jax.make_mesh((n_dev,), ("data",))
 
-    modes = ("sync", "async") if args.mode == "all" else (args.mode,)
+    modes = (("sync", "async", "fused") if args.mode == "all"
+             else (args.mode,))
+    embed_fused = {"auto": None, "on": True, "off": False}[args.fused_embed]
     bench = run_benches(
         model, modes=modes,
         batch_sizes=[int(b) for b in args.batch_sizes.split(",")],
         repeats=args.repeats, key=jax.random.PRNGKey(args.seed + 2),
+        embed_fused=embed_fused,
+        interpret=True if args.interpret else None,
         mesh=mesh, n_requests=args.async_requests,
         max_wait_ms=args.max_wait_ms, slo_ms=args.slo_ms)
     write_bench(args.out, bench)

@@ -1,0 +1,190 @@
+"""Bench regression gate: diff fresh BENCH_serve.json vs the baseline.
+
+CI's serve-smoke job runs `serve_cluster --smoke` (which writes
+BENCH_serve.json) and then this script against the committed
+BENCH_baseline.json. A metric regressing beyond --tolerance (default
+0.25 = 25%) fails the job; the full delta table is printed and, when
+$GITHUB_STEP_SUMMARY is set, appended to the job summary as markdown.
+
+Gated metrics:
+
+  sync    assignments_per_sec per batch size   (lower = regression)
+  async   queries_per_sec                      (lower = regression)
+          latency p95 ms                       (higher = regression)
+  fused   fused + two_pass queries_per_sec     (lower = regression)
+
+Informational (reported, never gated): async queue-wait p95 — at
+~1 ms scale it is OS-scheduler jitter, not serving performance.
+
+The committed baseline and the CI runner are different (and
+burstable-CPU) machines, so raw wall-clock numbers drift with hardware
+state even when the serving code is unchanged. Every BENCH_serve.json
+therefore carries a `calibration` section (best-call time of a fixed
+jitted matmul, `serve.bench.machine_calibration`); the gate rescales
+the fresh metrics by the baseline/fresh calibration ratio before
+diffing, so the ±25% tolerance measures the serving CODE, not the
+machine. The speed factor is printed with the table. If either file
+lacks calibration, raw numbers are compared (factor 1.0).
+
+A metric present in the baseline but missing from the fresh run counts
+as a regression (a bench section silently vanished); metrics only in the
+fresh run are reported as `new` and never fail. Refresh the baseline
+with --update after an intentional perf change (run the bench on a quiet
+machine; the 25% tolerance absorbs runner-to-runner noise, not a
+different benchmark configuration).
+
+  PYTHONPATH=src python benchmarks/check_bench_regression.py
+  PYTHONPATH=src python benchmarks/check_bench_regression.py --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def _dig(d: Dict, *path):
+    for p in path:
+        if not isinstance(d, dict) or p not in d:
+            return None
+        d = d[p]
+    return d
+
+
+# Reported in the table but never fail the gate (see module docstring).
+INFO_METRICS = {"async/queue_wait_p95_ms"}
+
+
+def collect_metrics(bench: Dict) -> Dict[str, Tuple[float, bool]]:
+    """Flatten one BENCH_serve.json dict into {metric: (value, hib)}."""
+    out: Dict[str, Tuple[float, bool]] = {}
+    for row in bench.get("results", []):
+        out[f"sync/batch={row['batch_size']}/assignments_per_sec"] = (
+            float(row["assignments_per_sec"]), True)
+    qps = _dig(bench, "async", "queries_per_sec")
+    if qps is not None:
+        out["async/queries_per_sec"] = (float(qps), True)
+    p95 = _dig(bench, "async", "latency", "latency_ms", "p95")
+    if p95 is not None:
+        out["async/latency_p95_ms"] = (float(p95), False)
+    qw95 = _dig(bench, "async", "latency", "queue_wait_ms", "p95")
+    if qw95 is not None:
+        out["async/queue_wait_p95_ms"] = (float(qw95), False)
+    for engine in ("fused", "two_pass"):
+        v = _dig(bench, "fused", engine, "queries_per_sec")
+        if v is not None:
+            out[f"fused/{engine}/queries_per_sec"] = (float(v), True)
+    return out
+
+
+def speed_factor(baseline: Dict, fresh: Dict) -> float:
+    """fresh-machine speed relative to the baseline machine (>1 = fresh
+    machine is slower); wall-clock metrics are normalized by this."""
+    b = _dig(baseline, "calibration", "matmul512_ms")
+    f = _dig(fresh, "calibration", "matmul512_ms")
+    if not b or not f:
+        return 1.0
+    return float(f) / float(b)
+
+
+def diff(baseline: Dict, fresh: Dict, tolerance: float
+         ) -> Tuple[List[Dict], bool, float]:
+    """Returns (table rows, any_regression, speed factor)."""
+    base_m = collect_metrics(baseline)
+    fresh_m = collect_metrics(fresh)
+    factor = speed_factor(baseline, fresh)
+    rows: List[Dict] = []
+    failed = False
+    for name in sorted(set(base_m) | set(fresh_m)):
+        b = base_m.get(name)
+        f = fresh_m.get(name)
+        if f is not None:
+            # Normalize out machine speed: throughput (higher-better)
+            # scales up on a slower machine, latency scales down.
+            val, hib = f
+            f = (val * factor if hib else val / factor), hib
+        if b is None:
+            rows.append({"metric": name, "baseline": None,
+                         "fresh": f[0], "delta": None, "status": "new"})
+            continue
+        info = name in INFO_METRICS
+        if f is None:
+            rows.append({"metric": name, "baseline": b[0], "fresh": None,
+                         "delta": None,
+                         "status": "info" if info else "MISSING"})
+            failed = failed or not info
+            continue
+        bval, hib = b
+        fval = f[0]
+        delta = (fval - bval) / bval if bval else 0.0
+        regressed = (not info and
+                     ((delta < -tolerance) if hib else (delta > tolerance)))
+        rows.append({"metric": name, "baseline": bval, "fresh": fval,
+                     "delta": delta,
+                     "status": ("info" if info else
+                                "REGRESSION" if regressed else "ok")})
+        failed = failed or regressed
+    return rows, failed, factor
+
+
+def _fmt(v: Optional[float]) -> str:
+    if v is None:
+        return "—"
+    return f"{v:,.2f}" if abs(v) < 1000 else f"{v:,.0f}"
+
+
+def format_table(rows: List[Dict], tolerance: float,
+                 factor: float = 1.0) -> str:
+    lines = [f"### Serve bench regression gate (tolerance ±{tolerance:.0%})",
+             "",
+             f"machine speed factor {factor:.2f}x (fresh vs baseline "
+             f"calibration matmul; fresh columns are speed-normalized)",
+             "", "| metric | baseline | fresh | delta | status |",
+             "|---|---:|---:|---:|---|"]
+    for r in rows:
+        delta = "—" if r["delta"] is None else f"{r['delta']:+.1%}"
+        lines.append(f"| {r['metric']} | {_fmt(r['baseline'])} | "
+                     f"{_fmt(r['fresh'])} | {delta} | {r['status']} |")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--fresh", default="BENCH_serve.json")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative regression allowed before failing")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the fresh file over the baseline and exit")
+    args = ap.parse_args()
+
+    if args.update:
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"baseline updated: {args.fresh} -> {args.baseline}")
+        return 0
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    rows, failed, factor = diff(baseline, fresh, args.tolerance)
+    table = format_table(rows, args.tolerance, factor)
+    print(table)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as fh:
+            fh.write(table + "\n")
+    if failed:
+        print(f"\nFAIL: regression beyond {args.tolerance:.0%} "
+              f"(or a bench section vanished); see table above. "
+              f"Intentional? refresh with --update.")
+        return 1
+    print("\nOK: all gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,12 +5,19 @@ fwht/          in-VMEM radix-2 butterfly Walsh-Hadamard transform (the
 gram/          blocked kernel-matrix stripes on the MXU with the kernel
                nonlinearity fused (the streaming pass K[:, block])
 kmeans_assign/ fused distance + argmin for the Lloyd assignment step
+extend_embed/  fused gram->projection serving stripe: the (n, w) kernel
+               block is built and contracted against Sigma^{-1/2} U^T
+               tile by tile without ever leaving VMEM (serve/extend.py)
 
 Each subpackage ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 public wrapper, interpret=True on CPU) and ref.py (pure-jnp oracle used by
-the allclose test sweeps).
+the allclose test sweeps). CI's kernel-parity job runs the `kernels`-marked
+pytest subset, which forces every kernel through interpret mode against
+its oracle on a seeded shape grid.
 """
+from repro.kernels.extend_embed.ops import extend_embed_pallas
 from repro.kernels.fwht.ops import fwht_pallas
 from repro.kernels.gram.ops import gram_stripe_pallas
 from repro.kernels.kmeans_assign.ops import assign_pallas
-__all__ = ["fwht_pallas", "gram_stripe_pallas", "assign_pallas"]
+__all__ = ["extend_embed_pallas", "fwht_pallas", "gram_stripe_pallas",
+           "assign_pallas"]

@@ -1,0 +1,68 @@
+"""Public jit'd wrapper for the fused gram->projection stripe kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.extend_embed.extend_embed import extend_embed_call
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = size % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, mult - rem)
+    return jnp.pad(x, pads)
+
+
+def padded_shapes(n: int, r: int, w: int, row_tile: int = 256
+                  ) -> tuple[int, int, int, int]:
+    """(row_tile, n_pad, r_pad, w_pad) the kernel actually runs at.
+
+    The single source of truth for the tiling: extend_embed_pallas pads
+    with exactly these values, and serve/bench.py derives the fused
+    engine's HBM byte count from them (each padded operand crosses HBM
+    once — that IS the kernel's memory contract).
+    """
+    row_tile = min(row_tile, max(128, 1 << (n - 1).bit_length()))
+    n_pad = -(-n // row_tile) * row_tile
+    r_pad = -(-r // 8) * 8
+    w_pad = -(-w // 128) * 128
+    return row_tile, n_pad, r_pad, w_pad
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "gamma", "degree",
+                                             "row_tile", "interpret"))
+def extend_embed_pallas(X: jnp.ndarray, P: jnp.ndarray, Xb: jnp.ndarray,
+                        kind: str = "polynomial", gamma: float = 0.0,
+                        degree: int = 2, row_tile: int = 256,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """Fused serving stripe P @ kappa(X, Xb) -> (r, w), one executable.
+
+    X (p, n) training data, P (r, n) projection Sigma^{-1/2} U^T, Xb (p, w)
+    query block. Pads n to the row tile, w to 128 lanes, r to 8 sublanes.
+
+    Padding is exact, not approximate: padded columns of X produce garbage
+    gram ROWS (nonzero for rbf, where kappa(0, x) != 0) but the matching
+    padded columns of P are zero, so they are annihilated in the
+    contraction; padded w columns and padded r rows are sliced off.
+    """
+    interp = _is_cpu() if interpret is None else interpret
+    p, n = X.shape
+    r = P.shape[0]
+    w = Xb.shape[1]
+    row_tile, _, _, _ = padded_shapes(n, r, w, row_tile)
+    Xp = _pad_to(X, 1, row_tile)
+    Pp = _pad_to(_pad_to(P, 1, row_tile), 0, 8)
+    Xbp = _pad_to(Xb, 1, 128)
+    out = extend_embed_call(Xp, Pp, Xbp, kind, gamma, degree, row_tile,
+                            interp)
+    return out[:r, :w]

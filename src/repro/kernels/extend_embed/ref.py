@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused gram->projection serving-stripe kernel."""
+import jax.numpy as jnp
+
+from repro.kernels.gram.ref import gram_stripe_ref
+
+
+def extend_embed_ref(X: jnp.ndarray, P: jnp.ndarray, Xb: jnp.ndarray,
+                     kind: str = "polynomial", gamma: float = 0.0,
+                     degree: int = 2) -> jnp.ndarray:
+    """P @ kappa(X, Xb). X: (p, n), P: (r, n), Xb: (p, w) -> (r, w).
+
+    This IS the two-pass path (gram stripe materialized, then projected);
+    the Pallas kernel must match it to fp32 accumulation tolerance.
+    """
+    return P @ gram_stripe_ref(X, Xb, kind=kind, gamma=gamma, degree=degree)

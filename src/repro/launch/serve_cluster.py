@@ -55,8 +55,16 @@ def main():
                     help="synthetic queries for the equality check")
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--bench", default="all",
-                    choices=["sync", "async", "all"],
+                    choices=["sync", "async", "fused", "all"],
                     help="which benchmark modes land in BENCH_serve.json")
+    ap.add_argument("--fused-embed", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="extension stripe engine for the benches: fused "
+                         "Pallas (on), two-pass (off), backend default "
+                         "(auto)")
+    ap.add_argument("--interpret", action="store_true",
+                    help="run Pallas kernels in interpret mode (forces "
+                         "the Pallas path on CPU — the CI hook)")
     ap.add_argument("--async-requests", type=int, default=256,
                     help="request count for the async latency bench")
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
@@ -66,12 +74,17 @@ def main():
     ap.add_argument("--sharded", action="store_true",
                     help="shard the extension matmul over all local "
                          "devices (needs >= 2)")
+    ap.add_argument("--bench-passes", type=int, default=1,
+                    help="bench repetitions; BENCH_serve.json gets the "
+                         "per-metric median (smoke forces >= 3 so the CI "
+                         "regression gate diffs stable numbers)")
     ap.add_argument("--bench-out", default="BENCH_serve.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.smoke:
         args.n = min(args.n, 2000)
         args.queries = min(args.queries, 1024)
+        args.bench_passes = max(args.bench_passes, 3)
 
     from repro.data import blob_ring
     from repro.serve import (DEFAULT_REGISTRY, ShardedExtender, assign,
@@ -170,24 +183,39 @@ def main():
     batch_sizes = [int(b) for b in args.batch_sizes.split(",") if b.strip()]
     if not batch_sizes:
         ap.error(f"--batch-sizes {args.batch_sizes!r} parses to nothing")
-    modes = ("sync", "async") if args.bench == "all" else (args.bench,)
-    bench = run_benches(served, modes=modes, batch_sizes=batch_sizes,
-                        repeats=args.repeats, key=k_query, mesh=mesh,
-                        n_requests=args.async_requests,
-                        max_wait_ms=args.max_wait_ms, slo_ms=args.slo_ms)
+    modes = (("sync", "async", "fused") if args.bench == "all"
+             else (args.bench,))
+    embed_fused = {"auto": None, "on": True, "off": False}[args.fused_embed]
+    from repro.serve import median_benches
+    bench = median_benches([
+        run_benches(served, modes=modes, batch_sizes=batch_sizes,
+                    repeats=args.repeats, key=k_query, mesh=mesh,
+                    embed_fused=embed_fused,
+                    interpret=True if args.interpret else None,
+                    n_requests=args.async_requests,
+                    max_wait_ms=args.max_wait_ms, slo_ms=args.slo_ms)
+        for _ in range(max(args.bench_passes, 1))])
     write_bench(args.bench_out, bench)
     print(format_bench(bench))
     print(f"wrote {args.bench_out}")
 
-    # Smoke also exercises the fused Pallas assignment path (interpret
-    # mode on CPU) for agreement with the jnp path.
+    # Smoke also forces both Pallas serving paths (interpret mode on CPU)
+    # for agreement with the jnp / two-pass paths: the fused kmeans_assign
+    # argmin and the fused gram->projection extend_embed stripe.
     if args.smoke:
         small = Xq[:, :256]
         lab_jnp, _ = assign(served, small, fused=False)
-        lab_pallas, _ = assign(served, small, fused=True)
+        lab_pallas, _ = assign(served, small, fused=True, interpret=True)
         assert np.array_equal(np.asarray(lab_jnp), np.asarray(lab_pallas)), \
             "fused Pallas assignment disagrees with jnp path"
         print("fused Pallas assignment path agrees (256 queries)")
+        Y_two = embed(served, small, fused=False)
+        Y_fused = embed(served, small, fused=True, interpret=True)
+        rel_f = (float(jnp.linalg.norm(Y_fused - Y_two)) /
+                 max(float(jnp.linalg.norm(Y_two)), 1e-30))
+        assert rel_f <= 1e-5, \
+            f"fused extend_embed stripe != two-pass: {rel_f:.2e}"
+        print(f"fused extend_embed stripe agrees (rel err {rel_f:.2e})")
     print("serve_cluster: OK")
 
 

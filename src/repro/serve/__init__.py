@@ -8,8 +8,13 @@ a deployable service:
                 arrays via repro.distributed.checkpoint)
   extend.py     streaming Nystrom-style out-of-sample extension
                 y(x) = Sigma^{-1/2} U^T kappa(X_train, x) and cluster
-                assignment (jnp or fused Pallas kmeans_assign path);
-                ShardedExtender shards the extension matmul over a mesh
+                assignment; Extender runs each stripe either through the
+                fused gram->projection Pallas kernel
+                (kernels/extend_embed, the off-CPU default — the
+                (n, block) block never leaves VMEM) or the two-pass
+                gram+projection executables, plus the jnp / fused Pallas
+                kmeans_assign argmin; ShardedExtender shards the
+                extension matmul over a mesh
   batcher.py    micro-batching with power-of-two shape buckets so variable
                 query traffic never retraces; coalescing request queue
   scheduler.py  AsyncBatcher: futures per request, deadline-driven flush
@@ -26,8 +31,10 @@ from repro.serve.artifact import (FittedModel, ModelSpec, fit_model,
                                   load_model, save_model)
 from repro.serve.batcher import MicroBatcher, bucket_size
 from repro.serve.bench import (benchmark_assign, benchmark_async,
-                               format_bench, run_benches, write_bench)
-from repro.serve.extend import ShardedExtender, assign, embed, embed_sharded
+                               benchmark_fused, format_bench,
+                               median_benches, run_benches, write_bench)
+from repro.serve.extend import (Extender, ShardedExtender, assign, embed,
+                                embed_sharded, resolve_pallas_path)
 from repro.serve.latency import LatencyStats
 from repro.serve.registry import DEFAULT_REGISTRY, ModelRegistry
 from repro.serve.scheduler import AsyncBatcher
@@ -35,9 +42,10 @@ from repro.serve.scheduler import AsyncBatcher
 __all__ = [
     "FittedModel", "ModelSpec", "fit_model", "load_model", "save_model",
     "MicroBatcher", "bucket_size",
-    "benchmark_assign", "benchmark_async", "format_bench", "run_benches",
-    "write_bench",
-    "ShardedExtender", "assign", "embed", "embed_sharded",
+    "benchmark_assign", "benchmark_async", "benchmark_fused",
+    "format_bench", "median_benches", "run_benches", "write_bench",
+    "Extender", "ShardedExtender", "assign", "embed", "embed_sharded",
+    "resolve_pallas_path",
     "LatencyStats",
     "DEFAULT_REGISTRY", "ModelRegistry",
     "AsyncBatcher",

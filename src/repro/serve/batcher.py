@@ -40,11 +40,20 @@ def bucket_size(b: int, min_bucket: int = 8, max_bucket: int = 1024) -> int:
 
 
 class MicroBatcher:
-    """Bucketed assignment front-end for one FittedModel."""
+    """Bucketed assignment front-end for one FittedModel.
+
+    fused: Pallas kmeans_assign for the argmin (None = off-CPU default);
+    embed_fused: fused extend_embed Pallas stripe engine (same default);
+    interpret: Pallas interpret-mode override for BOTH kernels — the knob
+        CI uses to force the Pallas serving path on CPU (see
+        extend.resolve_pallas_path for the conflict rules).
+    """
 
     def __init__(self, model: FittedModel, block: Optional[int] = None,
                  min_bucket: int = 8, max_bucket: int = 1024,
                  fused: Optional[bool] = None,
+                 embed_fused: Optional[bool] = None,
+                 interpret: Optional[bool] = None,
                  mesh=None, mesh_axis: str = "data"):
         self.model = model
         self.block = block or model.spec.block
@@ -52,10 +61,16 @@ class MicroBatcher:
         self.max_bucket = max_bucket
         self.fused = fused
         # mesh != None routes every bucketed assignment through the
-        # mesh-sharded extension (same bucketing policy, sharded matmul).
-        self.extender = (extend.ShardedExtender(model, mesh, mesh_axis,
-                                                 self.block)
-                          if mesh is not None else None)
+        # mesh-sharded extension (same bucketing policy, sharded matmul);
+        # otherwise one Extender owns the stripe engine + executables.
+        self.sharded = mesh is not None
+        self.extender = (
+            extend.ShardedExtender(model, mesh, mesh_axis, self.block,
+                                   fused=embed_fused, interpret=interpret,
+                                   assign_fused=fused)
+            if self.sharded else
+            extend.Extender(model, self.block, fused=embed_fused,
+                            interpret=interpret, assign_fused=fused))
         self._pending: List[np.ndarray] = []
         self.stats: Dict = {}
         self.reset_stats()
@@ -88,17 +103,17 @@ class MicroBatcher:
         bsz = bucket_size(w, self.min_bucket, self.max_bucket)
         padded = (chunk if w == bsz
                   else jnp.pad(chunk, ((0, 0), (0, bsz - w))))
-        if self.extender is not None:
+        if self.sharded:
             # Sharded path: stripe width is baked into the one compiled
             # sharded executable at ShardedExtender construction.
-            lab, d2 = self.extender.assign(padded, self.fused)
+            lab, d2 = self.extender.assign(padded)
         else:
             # Narrow the gram stripe to the bucket: a bucket-8 request
             # must not pay an n x block (e.g. 512-wide) kernel stripe.
             # bsz is already pow-2-clamped, so stripe widths — and hence
             # compiled executables — stay bounded by the bucket count.
-            lab, d2 = extend.assign(self.model, padded,
-                                    min(self.block, bsz), self.fused)
+            lab, d2 = self.extender.assign(padded,
+                                           block=min(self.block, bsz))
         self.stats["queries"] += w
         self.stats["padded_queries"] += bsz - w
         self.stats["batches"] += 1

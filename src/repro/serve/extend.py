@@ -10,32 +10,46 @@ kernel matrix is (numerically) rank <= r' — for a training point x_j,
 kappa(X_train, x_j) = K e_j = U Sigma U^T e_j and the formula collapses to
 Sigma^{1/2} U^T e_j = Y e_j.
 
-Memory model: the (n, b) kernel block kappa(X_train, X_query) is never
-materialized beyond n x min(b, block) — query columns stream through
-`kernels_fn.stripe_iterator` (lhs=X_train) in stripes of the SAME `block`
-the training pass used, so serving never exceeds the training-time memory
-budget no matter how many queries arrive at once. Each stripe — ragged
-tails included — runs through one jitted gram_stripe executable and one
-jitted projection executable (pad_tail=True), so steady-state serving
-never retraces.
+Memory model (`Extender`): the (n, b) kernel block kappa(X_train, X_query)
+is never materialized beyond n x min(b, block) — query columns stream in
+stripes of the SAME `block` the training pass used, so serving never
+exceeds the training-time memory budget no matter how many queries arrive
+at once. Two stripe engines implement that contract:
 
-Assignment offers two paths: a pure-jnp distance argmin, and a fused path
-that reuses the Pallas kmeans_assign kernel (distance + argmin in VMEM, the
-(b, k) matrix never leaves the chip). On CPU the Pallas kernel runs in
-interpret mode, so the jnp path is the default there.
+  fused (the serving default off-CPU)  one Pallas executable per stripe:
+      kernels/extend_embed builds each (row_tile, block) gram tile and
+      contracts it against P = Sigma^{-1/2} U^T on-chip, so even the
+      n x block stripe only ever exists as one VMEM tile — the (n, block)
+      block never round-trips through HBM between gram and projection.
+  two-pass (the CPU default)  one jitted gram_stripe executable plus one
+      jitted projection executable per stripe, (n, block) materialized
+      between them (kernels_fn.stripe_iterator, pad_tail=True).
+
+Both engines run every stripe — ragged tails included — through one
+jitted executable per bucket shape (queries are zero-padded to a column
+multiple of the stripe width), so steady-state serving never retraces.
+
+Pallas path selection is EXPLICIT: `fused=None` picks the Pallas engine
+off-CPU; `fused=True` on CPU runs it in interpret mode (with a warning
+unless `interpret=True` was passed, which is how CI forces the Pallas
+path on CPU); `fused=True, interpret=False` on CPU and `fused=False,
+interpret=<anything>` are conflicting settings and raise. The same rules
+govern the Pallas kmeans_assign assignment path (`assign_fused=`).
 
 Mesh-sharded path (`ShardedExtender`): the extension matmul
-Sigma^{-1/2} U^T kappa(X_train, x) is the serving-time hot loop, and it
-shards the same way the training pass does (distributed/cluster.py):
-X_train column-sharded and U row-sharded over the mesh's data axis, each
-device computing its n/shards x block stripe of the kernel against the
-replicated query block plus the matching partial projection, combined by
-ONE psum of the tiny (r, block) partials. Per-device kernel memory drops
-from n x block to n/shards x block and embedding throughput scales with
-device count; see docs/SERVING.md.
+P kappa(X_train, x) is the serving-time hot loop, and it shards the same
+way the training pass does (distributed/cluster.py): X_train and P both
+column-sharded over the mesh's data axis, each device computing its
+n/shards x block stripe of the kernel against the replicated query block
+fused into its (r, block) partial projection, combined by ONE psum of the
+tiny (r, block) partials. Per-device kernel memory drops from n x block
+to n/shards x block and embedding throughput scales with device count;
+see docs/SERVING.md.
 """
 from __future__ import annotations
 
+import functools
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -45,40 +59,194 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.kernels_fn import stripe_iterator
 from repro.core.kmeans import _sq_dists
+from repro.kernels.extend_embed.ops import extend_embed_pallas
 from repro.kernels.kmeans_assign.ops import assign_pallas
 from repro.serve.artifact import FittedModel
 
 _EIG_EPS = 1e-7
 
+# kernel_fn() falls back to these when the spec omits a param (see
+# kernels_fn registry defaults); the Pallas static args must agree.
+_STATIC_DEFAULTS = {"polynomial": {"gamma": 0.0, "degree": 2},
+                    "rbf": {"gamma": 1.0}, "linear": {}}
+
+
+def _kernel_statics(spec) -> Tuple[str, float, int]:
+    kp = dict(_STATIC_DEFAULTS.get(spec.kernel, {}))
+    kp.update(spec.kernel_params)
+    return spec.kernel, float(kp.get("gamma", 0.0)), int(kp.get("degree", 2))
+
+
+def resolve_pallas_path(fused: Optional[bool], interpret: Optional[bool],
+                        what: str) -> Tuple[bool, bool]:
+    """Resolve a (fused, interpret) request into a concrete path choice.
+
+    Contract (the fix for the old silently-ignored CPU override):
+
+      fused=None       Pallas off-CPU; on CPU only when interpret=True
+                       explicitly opts in (how CI forces the Pallas path).
+      fused=True, CPU  honoured — runs in interpret mode, warning unless
+                       interpret=True was passed explicitly.
+      fused=True, interpret=False, CPU   ValueError: Pallas cannot lower
+                       natively on CPU; the settings conflict.
+      fused=False, interpret set         ValueError: interpret only
+                       applies to the Pallas path; the settings conflict.
+    """
+    cpu = jax.default_backend() == "cpu"
+    if fused is False:
+        if interpret is not None:
+            raise ValueError(
+                f"{what}: fused=False conflicts with interpret="
+                f"{interpret} — the interpret flag only applies to the "
+                f"Pallas path")
+        return False, False
+    if fused is None:
+        fused = (not cpu) or interpret is True
+        if not fused:
+            return False, False
+    if cpu:
+        if interpret is False:
+            raise ValueError(
+                f"{what}: the Pallas path was requested with "
+                f"interpret=False on the CPU backend, where Pallas "
+                f"cannot lower natively — drop interpret=False or run "
+                f"on an accelerator")
+        if interpret is None:
+            warnings.warn(
+                f"{what}: Pallas path requested on the CPU backend; "
+                f"running in interpret mode (pass interpret=True to "
+                f"acknowledge, or fused=False for the jnp path)",
+                stacklevel=3)
+        return True, True
+    return True, bool(interpret) if interpret is not None else False
+
 
 @jax.jit
-def _project_stripe(U: jnp.ndarray, eigvals: jnp.ndarray,
-                    stripe: jnp.ndarray) -> jnp.ndarray:
-    """Sigma^{-1/2} U^T applied to one (n, block) kernel stripe -> (r, block).
+def _project_stripe(proj: jnp.ndarray, stripe: jnp.ndarray) -> jnp.ndarray:
+    """P = Sigma^{-1/2} U^T applied to one (n, block) stripe -> (r, block).
 
-    Eigenvalues below _EIG_EPS (rank-deficient directions) map to 0 rather
-    than exploding; those coordinates carry no kernel mass anyway.
+    The second executable of the two-pass engine — the (n, block) stripe
+    is an HBM round-trip between gram and this matmul (the fused engine
+    exists to delete exactly that traffic).
     """
-    inv_sqrt = jnp.where(eigvals > _EIG_EPS, 1.0 / jnp.sqrt(eigvals), 0.0)
-    return (inv_sqrt[:, None] * U.T) @ stripe
+    return proj @ stripe
 
 
-def embed(model: FittedModel, Xq: jnp.ndarray,
-          block: Optional[int] = None) -> jnp.ndarray:
-    """Embed query points Xq (p, b) -> Y_q (r, b), streaming over columns."""
-    if Xq.shape[0] != model.spec.p:
-        raise ValueError(f"query dim {Xq.shape[0]} != model dim "
-                         f"{model.spec.p}")
-    block = block or model.spec.block
-    kern = model.kernel_fn()
-    b = Xq.shape[1]
-    out = jnp.zeros((model.spec.r, b), jnp.float32)
-    for start, stripe in stripe_iterator(kern, Xq, block, lhs=model.X_train,
-                                         pad_tail=True):
-        yb = _project_stripe(model.U, model.eigvals, stripe)
-        width = min(block, b - start)
-        out = jax.lax.dynamic_update_slice(out, yb[:, :width], (0, start))
-    return out
+@functools.partial(jax.jit, static_argnames=("kind", "gamma", "degree",
+                                             "block", "interpret"))
+def _fused_stripe(X: jnp.ndarray, proj: jnp.ndarray, Xqp: jnp.ndarray,
+                  start: jnp.ndarray, *, kind: str, gamma: float,
+                  degree: int, block: int, interpret: bool) -> jnp.ndarray:
+    """One fused serving stripe; `start` is traced so all stripes of a
+    bucket — ragged tail included — share this single executable."""
+    xb = jax.lax.dynamic_slice_in_dim(Xqp, start, block, axis=1)
+    return extend_embed_pallas(X, proj, xb, kind=kind, gamma=gamma,
+                               degree=degree, interpret=interpret)
+
+
+def _projection(model: FittedModel) -> jnp.ndarray:
+    """P = Sigma^{-1/2} U^T (r, n). Eigenvalues below _EIG_EPS
+    (rank-deficient directions) map to 0 rather than exploding; those
+    coordinates carry no kernel mass anyway."""
+    inv_sqrt = jnp.where(model.eigvals > _EIG_EPS,
+                         1.0 / jnp.sqrt(model.eigvals), 0.0)
+    return inv_sqrt[:, None] * model.U.T
+
+
+class Extender:
+    """Single-device extension engine: fused Pallas stripe or two-pass.
+
+    Holds the precomputed projection P = Sigma^{-1/2} U^T and the resolved
+    path choices, so serving front-ends (MicroBatcher/AsyncBatcher)
+    construct one Extender and reuse its executables.
+
+    fused:        extend_embed stripe engine (None = Pallas off-CPU).
+    assign_fused: Pallas kmeans_assign for the argmin (same default).
+    interpret:    Pallas interpret-mode override, applied to both kernels;
+                  see `resolve_pallas_path` for the conflict rules.
+    """
+
+    def __init__(self, model: FittedModel, block: Optional[int] = None, *,
+                 fused: Optional[bool] = None,
+                 interpret: Optional[bool] = None,
+                 assign_fused: Optional[bool] = None):
+        self.model = model
+        self.block = block or model.spec.block
+        self._interpret_arg = interpret
+        self.fused, self._interpret = resolve_pallas_path(
+            fused, interpret, "fused extend_embed stripe")
+        self.assign_fused, self._assign_interpret = resolve_pallas_path(
+            assign_fused, interpret, "Pallas kmeans_assign")
+        self._proj = _projection(model)
+        self._statics = _kernel_statics(model.spec)
+
+    def embed(self, Xq: jnp.ndarray,
+              block: Optional[int] = None) -> jnp.ndarray:
+        """Embed query points Xq (p, b) -> Y_q (r, b), streaming over
+        columns in stripes of `block` (callers may narrow per bucket)."""
+        model = self.model
+        if Xq.shape[0] != model.spec.p:
+            raise ValueError(f"query dim {Xq.shape[0]} != model dim "
+                             f"{model.spec.p}")
+        block = block or self.block
+        b = Xq.shape[1]
+        out = jnp.zeros((model.spec.r, b), jnp.float32)
+        if self.fused:
+            kind, gamma, degree = self._statics
+            b_pad = -(-b // block) * block
+            Xqp = (Xq if b_pad == b
+                   else jnp.pad(Xq, ((0, 0), (0, b_pad - b))))
+            for start in range(0, b, block):
+                yb = _fused_stripe(model.X_train, self._proj, Xqp,
+                                   jnp.asarray(start), kind=kind,
+                                   gamma=gamma, degree=degree, block=block,
+                                   interpret=self._interpret)
+                width = min(block, b - start)
+                out = jax.lax.dynamic_update_slice(out, yb[:, :width],
+                                                   (0, start))
+            return out
+        kern = model.kernel_fn()
+        for start, stripe in stripe_iterator(kern, Xq, block,
+                                             lhs=model.X_train,
+                                             pad_tail=True):
+            yb = _project_stripe(self._proj, stripe)
+            width = min(block, b - start)
+            out = jax.lax.dynamic_update_slice(out, yb[:, :width],
+                                               (0, start))
+        return out
+
+    def assign(self, Xq: jnp.ndarray, block: Optional[int] = None,
+               fused: Optional[bool] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Assign queries to fitted clusters: (labels (b,), sq dist (b,)).
+
+        `fused` overrides the constructor's assignment-path choice for
+        this call (re-resolved, so the CPU conflict rules still apply;
+        the constructor's interpret arg is only replayed when the Pallas
+        path is requested — fused=False per call always means the jnp
+        argmin, even on an interpret=True extender).
+        """
+        if fused is None:
+            use_fused, interp = self.assign_fused, self._assign_interpret
+        else:
+            use_fused, interp = resolve_pallas_path(
+                fused, self._interpret_arg if fused else None,
+                "Pallas kmeans_assign")
+        Yq = self.embed(Xq, block).T                     # (b, r)
+        if use_fused:
+            return assign_pallas(Yq, self.model.centroids,
+                                 interpret=interp)
+        return _assign_jnp(Yq, self.model.centroids)
+
+
+def embed(model: FittedModel, Xq: jnp.ndarray, block: Optional[int] = None,
+          fused: Optional[bool] = None,
+          interpret: Optional[bool] = None) -> jnp.ndarray:
+    """One-shot embed Xq (p, b) -> (r, b). Serving paths should hold an
+    `Extender` and reuse it; this constructs a throwaway one (the jitted
+    stripe executables are shared module-level, so only the tiny
+    projection precompute is repaid)."""
+    return Extender(model, block, fused=fused, interpret=interpret).embed(Xq)
 
 
 @jax.jit
@@ -89,19 +257,20 @@ def _assign_jnp(Yq: jnp.ndarray, C: jnp.ndarray
 
 
 def assign(model: FittedModel, Xq: jnp.ndarray,
-           block: Optional[int] = None, fused: Optional[bool] = None
+           block: Optional[int] = None, fused: Optional[bool] = None,
+           embed_fused: Optional[bool] = None,
+           interpret: Optional[bool] = None
            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Assign queries to fitted clusters: (labels (b,), sq distance (b,)).
 
-    fused=True routes the argmin through the Pallas kmeans_assign kernel
-    (the serving hot path on TPU); default picks it off-CPU.
+    fused routes the argmin through the Pallas kmeans_assign kernel (the
+    serving default off-CPU); embed_fused picks the extend_embed stripe
+    engine; interpret applies to both Pallas kernels (see
+    `resolve_pallas_path` for the explicit CPU-override contract).
     """
-    if fused is None:
-        fused = jax.default_backend() != "cpu"
-    Yq = embed(model, Xq, block).T                       # (b, r)
-    if fused:
-        return assign_pallas(Yq, model.centroids)
-    return _assign_jnp(Yq, model.centroids)
+    ext = Extender(model, block, fused=embed_fused, interpret=interpret,
+                   assign_fused=fused)
+    return ext.assign(Xq)
 
 
 # ---------------------------------------------------------------------------
@@ -115,23 +284,29 @@ class ShardedExtender:
     training data again):
 
         X_train (p, n_pad)  columns sharded P(None, axis)
-        U       (n_pad, r)  rows    sharded P(axis, None)
+        proj    (r, n_pad)  columns sharded P(None, axis)
         queries (p, block)  replicated per stripe
 
-    n is zero-padded up to a multiple of the shard count; padded U rows
-    are zero, so whatever kernel values the padded X_train columns produce
-    are annihilated by the projection (exact, not approximate — this is
-    why X_train's zero-padding is safe even for kernels with
-    kappa(0, x) != 0, e.g. rbf).
+    n is zero-padded up to a multiple of the shard count; padded proj
+    columns are zero (they come from padded U rows), so whatever kernel
+    values the padded X_train columns produce are annihilated by the
+    projection (exact, not approximate — this is why X_train's
+    zero-padding is safe even for kernels with kappa(0, x) != 0, e.g.
+    rbf).
 
-    Per stripe each device materializes only its (n_pad/shards, block)
-    slab of kappa(X_train, x) and contracts it immediately into an
-    (r, block) partial; the single psum sums the partials. Communication
-    per stripe is r * block floats — independent of n.
+    Per stripe each device contracts its (n_pad/shards, block) slab of
+    kappa(X_train, x) into an (r, block) partial — through the fused
+    extend_embed Pallas kernel when `fused` resolves on (the slab then
+    never leaves VMEM either), or a jnp gram+matmul otherwise — and the
+    single psum sums the partials. Communication per stripe is r * block
+    floats — independent of n.
     """
 
     def __init__(self, model: FittedModel, mesh, axis: str = "data",
-                 block: Optional[int] = None):
+                 block: Optional[int] = None,
+                 fused: Optional[bool] = None,
+                 interpret: Optional[bool] = None,
+                 assign_fused: Optional[bool] = None):
         if axis not in mesh.axis_names:
             raise ValueError(f"mesh has no axis {axis!r}; "
                              f"have {mesh.axis_names}")
@@ -140,36 +315,46 @@ class ShardedExtender:
         self.axis = axis
         self.block = block or model.spec.block
         self.shards = dict(mesh.shape)[axis]
+        self._interpret_arg = interpret
+        self.fused, self._interpret = resolve_pallas_path(
+            fused, interpret, "fused extend_embed stripe (sharded)")
+        self.assign_fused, self._assign_interpret = resolve_pallas_path(
+            assign_fused, interpret, "Pallas kmeans_assign")
         n = model.spec.n
         n_pad = -(-n // self.shards) * self.shards
         Xt = model.X_train
-        U = model.U
+        proj = _projection(model)
         if n_pad != n:
             Xt = jnp.pad(Xt, ((0, 0), (0, n_pad - n)))
-            U = jnp.pad(U, ((0, n_pad - n), (0, 0)))
+            proj = jnp.pad(proj, ((0, 0), (0, n_pad - n)))
         self._Xt = jax.device_put(Xt, NamedSharding(mesh, P(None, axis)))
-        self._U = jax.device_put(U, NamedSharding(mesh, P(axis, None)))
-        self._inv_sqrt = jnp.where(model.eigvals > _EIG_EPS,
-                                   1.0 / jnp.sqrt(model.eigvals), 0.0)
+        self._proj = jax.device_put(proj,
+                                    NamedSharding(mesh, P(None, axis)))
         kern = model.kernel_fn()
+        kind, gamma, degree = _kernel_statics(model.spec)
         block_w = self.block
         ax = self.axis
+        use_fused, interp = self.fused, self._interpret
 
         @jax.jit
-        def stripe_embed(Xt_sh, U_sh, inv_sqrt, Xqp, start):
+        def stripe_embed(Xt_sh, proj_sh, Xqp, start):
             xb = jax.lax.dynamic_slice_in_dim(Xqp, start, block_w, axis=1)
 
-            def body(xl, ul, xbl):
-                stripe = kern(xl, xbl)                  # (n_local, block)
-                part = (inv_sqrt[:, None] * ul.T) @ stripe
-                return jax.lax.psum(part, ax)[None]     # (1, r, block)
+            def body(xl, prl, xbl):
+                if use_fused:
+                    part = extend_embed_pallas(
+                        xl, prl, xbl, kind=kind, gamma=gamma,
+                        degree=degree, interpret=interp)
+                else:
+                    part = prl @ kern(xl, xbl)           # (r, block)
+                return jax.lax.psum(part, ax)[None]      # (1, r, block)
 
             out = shard_map(body, mesh=mesh,
-                            in_specs=(P(None, ax), P(ax, None),
+                            in_specs=(P(None, ax), P(None, ax),
                                       P(None, None)),
                             out_specs=P(ax, None, None),
-                            check_rep=False)(Xt_sh, U_sh, xb)
-            return out[0]                               # (r, block)
+                            check_rep=False)(Xt_sh, proj_sh, xb)
+            return out[0]                                # (r, block)
 
         self._stripe_embed = stripe_embed
 
@@ -177,9 +362,9 @@ class ShardedExtender:
         """Embed Xq (p, b) -> (r, b), streaming query columns in stripes.
 
         Same single-executable streaming discipline as the unsharded
-        `embed`: Xq is zero-padded to a column multiple of `block`, every
-        stripe (ragged tail included) runs the one jitted sharded
-        executable, and padded columns are sliced off at the end.
+        `Extender.embed`: Xq is zero-padded to a column multiple of
+        `block`, every stripe (ragged tail included) runs the one jitted
+        sharded executable, and padded columns are sliced off at the end.
         """
         if Xq.shape[0] != self.model.spec.p:
             raise ValueError(f"query dim {Xq.shape[0]} != model dim "
@@ -191,19 +376,24 @@ class ShardedExtender:
                else jnp.pad(Xq, ((0, 0), (0, b_pad - b))))
         out = jnp.zeros((self.model.spec.r, b_pad), jnp.float32)
         for start in range(0, b_pad, block):
-            yb = self._stripe_embed(self._Xt, self._U, self._inv_sqrt,
-                                    Xqp, jnp.asarray(start))
+            yb = self._stripe_embed(self._Xt, self._proj, Xqp,
+                                    jnp.asarray(start))
             out = jax.lax.dynamic_update_slice(out, yb, (0, start))
         return out[:, :b]
 
     def assign(self, Xq: jnp.ndarray, fused: Optional[bool] = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Sharded-embed then centroid argmin; mirrors `assign`."""
+        """Sharded-embed then centroid argmin; mirrors `Extender.assign`."""
         if fused is None:
-            fused = jax.default_backend() != "cpu"
+            use_fused, interp = self.assign_fused, self._assign_interpret
+        else:
+            use_fused, interp = resolve_pallas_path(
+                fused, self._interpret_arg if fused else None,
+                "Pallas kmeans_assign")
         Yq = self.embed(Xq).T                            # (b, r)
-        if fused:
-            return assign_pallas(Yq, self.model.centroids)
+        if use_fused:
+            return assign_pallas(Yq, self.model.centroids,
+                                 interpret=interp)
         return _assign_jnp(Yq, self.model.centroids)
 
 

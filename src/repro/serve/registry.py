@@ -62,7 +62,10 @@ class ModelRegistry:
     def batcher(self, name: str, **kwargs) -> MicroBatcher:
         """Per-model MicroBatcher, cached so its executable stats persist.
 
-        kwargs are only honoured on first construction for a given name.
+        kwargs are only honoured on first construction for a given name;
+        they include the stripe-engine overrides (embed_fused=/interpret=
+        force the fused extend_embed Pallas path, fused= the Pallas
+        kmeans_assign argmin — see extend.resolve_pallas_path).
         """
         if name not in self._batchers:
             self._batchers[name] = MicroBatcher(self.get(name), **kwargs)

@@ -65,8 +65,10 @@ class AsyncBatcher:
         coalescing; higher = bigger batches, better throughput.
     slo_ms: end-to-end latency SLO recorded per request (None disables).
     clock: monotonic-seconds callable; injectable for deterministic tests.
-    Remaining kwargs (block, min_bucket, max_bucket, fused, mesh,
-    mesh_axis) go straight to the inner MicroBatcher.
+    Remaining kwargs (block, min_bucket, max_bucket, fused, embed_fused,
+    interpret, mesh, mesh_axis) go straight to the inner MicroBatcher —
+    embed_fused/interpret pick the fused extend_embed Pallas stripe
+    engine exactly as in the sync path.
     """
 
     def __init__(self, model: FittedModel, *, max_wait_ms: float = 5.0,
@@ -163,7 +165,8 @@ class AsyncBatcher:
                 results = self.batcher.drain()
             except Exception as exc:                 # pragma: no cover
                 for p in batch:
-                    p.future.set_exception(exc)
+                    if p.future.set_running_or_notify_cancel():
+                        p.future.set_exception(exc)
                 raise
             # drain() must return exactly one result per request handed
             # to it; a mismatch means something enqueued on the inner
@@ -175,7 +178,8 @@ class AsyncBatcher:
                     f"{len(results)}: the inner MicroBatcher had foreign "
                     f"pending requests")
                 for p in batch:
-                    p.future.set_exception(exc)
+                    if p.future.set_running_or_notify_cancel():
+                        p.future.set_exception(exc)
                 raise exc
             complete_ts = self.clock()
             # LatencyStats mutation stays inside the flush lock: record()
@@ -184,8 +188,14 @@ class AsyncBatcher:
             for p in batch:
                 self.latency.record(p.enqueue_ts, flush_ts, complete_ts,
                                     queries=p.Xq.shape[1])
+        # A client may have cancel()ed its future while the request sat in
+        # the pending window; set_result on a cancelled future raises
+        # InvalidStateError and would strand every LATER future in the
+        # batch unresolved. set_running_or_notify_cancel() claims the
+        # future atomically (False = it was cancelled -> drop the result).
         for p, res in zip(batch, results):
-            p.future.set_result(res)
+            if p.future.set_running_or_notify_cancel():
+                p.future.set_result(res)
         return len(batch)
 
     # -- background pump -------------------------------------------------

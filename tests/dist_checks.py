@@ -165,7 +165,9 @@ def check_sharded_extend():
     """Serving-side sharded extension (serve.extend.ShardedExtender)
     matches the single-device path to fp32 tolerance, end to end through
     MicroBatcher(mesh=) and AsyncBatcher, on ragged n (250 pads to 256
-    over 8 shards)."""
+    over 8 shards) — on BOTH stripe engines: the two-pass gram+projection
+    body and the fused extend_embed Pallas kernel (interpret mode) run
+    per device inside the shard_map."""
     from repro.data import blob_ring
     from repro.serve import (AsyncBatcher, MicroBatcher, ShardedExtender,
                              assign, embed, fit_model)
@@ -173,8 +175,8 @@ def check_sharded_extend():
     mesh = jax.make_mesh((8,), ("data",))
     X, _ = blob_ring(jax.random.PRNGKey(0), n=250)
     Xq = jax.random.normal(jax.random.PRNGKey(2), (2, 101)) * 1.5
-    # rbf included: kappa(0, x) != 0, so this exercises the zero-row-U
-    # padding argument, not just harmless zero kernel columns.
+    # rbf included: kappa(0, x) != 0, so this exercises the zero-column
+    # projection-padding argument, not just harmless zero kernel columns.
     for kernel, params, r in (("polynomial", {"gamma": 0.0, "degree": 2}, 2),
                               ("rbf", {"gamma": 1.0}, 4)):
         m = fit_model(jax.random.PRNGKey(1), X, k=2, r=r, kernel=kernel,
@@ -184,20 +186,33 @@ def check_sharded_extend():
         rel = (float(jnp.linalg.norm(Ys - Y1)) /
                max(float(jnp.linalg.norm(Y1)), 1e-30))
         assert rel <= 1e-5, (kernel, rel)
+        # fused extend_embed Pallas stripe per device on the 8-way mesh.
+        ext_f = ShardedExtender(m, mesh, fused=True, interpret=True)
+        rel_f = (float(jnp.linalg.norm(ext_f.embed(Xq) - Y1)) /
+                 max(float(jnp.linalg.norm(Y1)), 1e-30))
+        assert rel_f <= 1e-5, (kernel, rel_f)
         lab1, _ = assign(m, Xq)
         labs, _ = ext.assign(Xq)
         assert np.array_equal(np.asarray(lab1), np.asarray(labs)), kernel
-        # whole serving stack on the sharded path: bucketed sync + async.
+        lab_f, _ = ext_f.assign(Xq)
+        assert np.array_equal(np.asarray(lab1), np.asarray(lab_f)), kernel
+        # whole serving stack on the sharded path: bucketed sync + async,
+        # two-pass and forced-fused.
         mb = MicroBatcher(m, max_bucket=64, mesh=mesh)
         lab_b, _ = mb.assign_batch(Xq)
         assert np.array_equal(lab_b, np.asarray(lab1)), kernel
-        ab = AsyncBatcher(m, max_wait_ms=5.0, max_bucket=64, mesh=mesh)
+        mb_f = MicroBatcher(m, max_bucket=64, mesh=mesh,
+                            embed_fused=True, interpret=True)
+        lab_bf, _ = mb_f.assign_batch(Xq)
+        assert np.array_equal(lab_bf, np.asarray(lab1)), kernel
+        ab = AsyncBatcher(m, max_wait_ms=5.0, max_bucket=64, mesh=mesh,
+                          embed_fused=True, interpret=True)
         futs = [ab.submit(np.asarray(Xq[:, i:i + 25]))
                 for i in range(0, 101, 25)]
         ab.flush()
         lab_a = np.concatenate([f.result()[0] for f in futs])
         assert np.array_equal(lab_a, np.asarray(lab1)), kernel
-    print("sharded_extend ok")
+    print("sharded_extend ok (two-pass + fused)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,166 @@
+"""Fused extend_embed serving stripe vs the two-pass path, end to end.
+
+The fused engine (kernels/extend_embed through serve.extend.Extender)
+must be indistinguishable from the two-pass gram+projection engine at
+every serving surface: raw embed, training-point round-trip, bucketed
+MicroBatcher, async futures — on rbf + linear + polynomial, ragged tail
+stripes included. Also pins the explicit fused=/interpret= override
+contract (the old code silently fell back to jnp on CPU).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import blob_ring
+from repro.serve import (AsyncBatcher, Extender, MicroBatcher, assign,
+                         embed, fit_model)
+from repro.serve.extend import resolve_pallas_path
+
+N, P, BLOCK = 250, 2, 64    # ragged: 250 = 3*64 + 58
+
+
+def _fit(kernel, params, r=2, key=1):
+    X, _ = blob_ring(jax.random.PRNGKey(0), n=N)
+    return fit_model(jax.random.PRNGKey(key), X, k=2, r=r, kernel=kernel,
+                     kernel_params=params, oversampling=10, block=BLOCK)
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {
+        "polynomial": _fit("polynomial", {"gamma": 0.0, "degree": 2}),
+        "rbf": _fit("rbf", {"gamma": 1.0}, r=4),
+        "linear": _fit("linear", {}),
+    }
+
+
+@pytest.mark.parametrize("kernel", ["polynomial", "rbf", "linear"])
+@pytest.mark.parametrize("width", [1, 64, 101])   # < block, == block, ragged
+def test_fused_embed_matches_two_pass(models, kernel, width):
+    m = models[kernel]
+    Xq = jax.random.normal(jax.random.PRNGKey(width), (P, width)) * 1.5
+    Y_two = embed(m, Xq, fused=False)
+    Y_fused = embed(m, Xq, fused=True, interpret=True)
+    rel = (float(jnp.linalg.norm(Y_fused - Y_two)) /
+           max(float(jnp.linalg.norm(Y_two)), 1e-30))
+    assert rel <= 1e-5, (kernel, width, rel)
+
+
+def test_fused_train_point_round_trip(models):
+    """The extension identity y(x_j) == Y e_j through the FUSED stripe."""
+    m = models["polynomial"]
+    Y_ext = embed(m, m.X_train, fused=True, interpret=True)
+    rel = (float(jnp.linalg.norm(Y_ext - m.Y)) /
+           float(jnp.linalg.norm(m.Y)))
+    assert rel <= 1e-4, rel
+
+
+def test_fused_narrowed_stripe_matches(models):
+    """Bucket-narrowed stripes (block < model block) stay exact."""
+    m = models["rbf"]
+    Xq = jax.random.normal(jax.random.PRNGKey(5), (P, 40)) * 1.5
+    want = embed(m, Xq, fused=False)
+    for blk in (8, 16, 40):
+        got = Extender(m, blk, fused=True, interpret=True).embed(Xq)
+        rel = (float(jnp.linalg.norm(got - want)) /
+               float(jnp.linalg.norm(want)))
+        assert rel <= 1e-5, (blk, rel)
+
+
+@pytest.mark.parametrize("kernel", ["polynomial", "rbf"])
+def test_fused_serving_stack_parity(models, kernel):
+    """MicroBatcher + AsyncBatcher on the forced Pallas path give the
+    same labels as the default two-pass stack, ragged requests and all."""
+    m = models[kernel]
+    Xq = jax.random.normal(jax.random.PRNGKey(11), (P, 101)) * 1.5
+    want, _ = assign(m, Xq)
+    mb = MicroBatcher(m, max_bucket=64, embed_fused=True, interpret=True)
+    got, _ = mb.assign_batch(Xq)
+    assert np.array_equal(got, np.asarray(want)), kernel
+    ab = AsyncBatcher(m, max_wait_ms=5.0, max_bucket=64,
+                      embed_fused=True, interpret=True)
+    futs = [ab.submit(np.asarray(Xq[:, i:i + 25]))
+            for i in range(0, 101, 25)]
+    ab.flush()
+    got_async = np.concatenate([f.result()[0] for f in futs])
+    assert np.array_equal(got_async, np.asarray(want)), kernel
+
+
+def test_assign_embed_fused_override(models):
+    m = models["polynomial"]
+    Xq = jax.random.normal(jax.random.PRNGKey(13), (P, 33)) * 1.5
+    lab, d2 = assign(m, Xq)
+    lab_f, d2_f = assign(m, Xq, embed_fused=True, interpret=True)
+    assert np.array_equal(np.asarray(lab), np.asarray(lab_f))
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2_f),
+                               rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# The explicit override contract (resolve_pallas_path) on the CPU backend
+# ---------------------------------------------------------------------------
+
+def test_cpu_default_is_two_pass():
+    fused, interp = resolve_pallas_path(None, None, "x")
+    assert fused is False and interp is False
+
+
+def test_cpu_interpret_opts_into_pallas():
+    fused, interp = resolve_pallas_path(None, True, "x")
+    assert fused is True and interp is True
+
+
+def test_cpu_fused_true_warns_then_interprets():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        fused, interp = resolve_pallas_path(True, None, "x")
+    assert fused is True and interp is True
+    assert any("interpret mode" in str(x.message) for x in w)
+
+
+def test_cpu_fused_true_interpret_true_is_silent():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        fused, interp = resolve_pallas_path(True, True, "x")
+    assert fused is True and interp is True and not w
+
+
+def test_conflicting_settings_raise(models):
+    m = models["polynomial"]
+    Xq = jnp.zeros((P, 4), jnp.float32)
+    # Pallas requested but interpret explicitly refused on CPU.
+    with pytest.raises(ValueError, match="interpret=False"):
+        embed(m, Xq, fused=True, interpret=False)
+    # interpret set while the Pallas path is explicitly off.
+    with pytest.raises(ValueError, match="fused=False conflicts"):
+        embed(m, Xq, fused=False, interpret=True)
+    with pytest.raises(ValueError, match="fused=False conflicts"):
+        MicroBatcher(m, embed_fused=False, interpret=True)
+
+
+def test_interpret_extender_allows_per_call_jnp_assign(models):
+    """assign(fused=False) on a forced-Pallas extender (the CI config)
+    must fall back to the jnp argmin, not raise a conflict — the
+    constructor's interpret arg only applies to Pallas-path requests."""
+    m = models["polynomial"]
+    ext = Extender(m, fused=True, interpret=True)
+    Xq = jax.random.normal(jax.random.PRNGKey(19), (P, 12)) * 1.5
+    lab_pal, _ = ext.assign(Xq)                   # Pallas (constructor)
+    lab_jnp, _ = ext.assign(Xq, fused=False)      # per-call jnp fallback
+    assert np.array_equal(np.asarray(lab_pal), np.asarray(lab_jnp))
+
+
+def test_extender_per_call_assign_override(models):
+    m = models["polynomial"]
+    ext = Extender(m)    # CPU defaults: two-pass embed, jnp assign
+    assert ext.fused is False and ext.assign_fused is False
+    Xq = jax.random.normal(jax.random.PRNGKey(17), (P, 20)) * 1.5
+    lab_jnp, _ = ext.assign(Xq)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        lab_pal, _ = ext.assign(Xq, fused=True)     # per-call: warn + interp
+    assert any("interpret mode" in str(x.message) for x in w)
+    assert np.array_equal(np.asarray(lab_jnp), np.asarray(lab_pal))

@@ -7,6 +7,8 @@ import pytest
 from repro.kernels import assign_pallas
 from repro.kernels.kmeans_assign.ref import assign_ref
 
+pytestmark = pytest.mark.kernels    # CI kernel-parity job runs -m kernels
+
 
 @pytest.mark.parametrize("n,r,k", [(50, 2, 2), (1000, 2, 7), (513, 16, 100),
                                    (2048, 128, 8), (31, 5, 3)])

@@ -7,6 +7,8 @@ import pytest
 from repro.kernels import fwht_pallas
 from repro.kernels.fwht.ref import fwht_ref
 
+pytestmark = pytest.mark.kernels    # CI kernel-parity job runs -m kernels
+
 
 @pytest.mark.parametrize("n", [8, 64, 512, 4096, 1 << 13, 1 << 14, 1 << 15])
 @pytest.mark.parametrize("c", [1, 3, 128, 200])

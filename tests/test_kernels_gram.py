@@ -7,6 +7,8 @@ import pytest
 from repro.kernels import gram_stripe_pallas
 from repro.kernels.gram.ref import gram_stripe_ref
 
+pytestmark = pytest.mark.kernels    # CI kernel-parity job runs -m kernels
+
 
 @pytest.mark.parametrize("p,n,w", [(2, 100, 12), (19, 555, 64), (7, 1024, 128),
                                    (128, 256, 256), (3, 97, 1)])

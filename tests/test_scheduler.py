@@ -222,6 +222,21 @@ def test_flush_rejects_foreign_inner_requests(model):
         fut.result(timeout=0)                # future carries the error
 
 
+def test_cancelled_future_does_not_strand_the_batch(model):
+    """A client cancelling its pending future must not break the flush:
+    set_result on a cancelled future raises InvalidStateError, which
+    would leave every LATER future in the batch unresolved forever."""
+    ab = AsyncBatcher(model, max_wait_ms=1e9)
+    reqs = _requests([3, 4, 5])
+    futs = [ab.submit(r) for r in reqs]
+    assert futs[1].cancel()              # pending -> cancellable
+    assert ab.flush() == 3
+    for i in (0, 2):
+        labels, d2 = futs[i].result(timeout=5)
+        assert labels.shape == (reqs[i].shape[1],)
+    assert futs[1].cancelled()
+
+
 def test_pump_thread_survives_flush_errors(model):
     """A poisoned batch must not kill the pump thread: its futures carry
     the exception and later requests still get served."""
