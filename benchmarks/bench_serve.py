@@ -8,6 +8,9 @@ Fits a model on synthetic blob+ring data, then measures:
   --mode fused    fused gram->projection Pallas stripe vs the two-pass
                   gram+projection executables, plus the per-stripe HBM
                   delta from launch/hlo_analysis
+  --mode swap     async traffic across a warm hot-swap: measured flip
+                  duration + p95 before/after from the surviving
+                  LatencyStats
   --mode all      all of the above (default)
 
 --fused-embed on --interpret forces the Pallas stripe engine for the
@@ -38,7 +41,7 @@ def main():
     ap.add_argument("--batch-sizes", default="64,512")
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--mode", default="all",
-                    choices=["sync", "async", "fused", "all"])
+                    choices=["sync", "async", "fused", "swap", "all"])
     ap.add_argument("--fused-embed", default="auto",
                     choices=["auto", "on", "off"],
                     help="extension stripe engine for sync/async modes: "
@@ -71,7 +74,7 @@ def main():
             ap.error(f"--sharded needs >= 2 devices, have {n_dev}")
         mesh = jax.make_mesh((n_dev,), ("data",))
 
-    modes = (("sync", "async", "fused") if args.mode == "all"
+    modes = (("sync", "async", "fused", "swap") if args.mode == "all"
              else (args.mode,))
     embed_fused = {"auto": None, "on": True, "off": False}[args.fused_embed]
     bench = run_benches(

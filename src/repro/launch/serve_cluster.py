@@ -14,12 +14,17 @@ End-to-end demo/check of repro.serve on synthetic data:
      (--bench async), or both (--bench all, the default),
   5. verify the async path resolves futures bit-identically to a
      synchronous drain of the same requests,
-  6. with --sharded, run the extension matmul mesh-sharded over all local
+  6. with --swap, exercise the model lifecycle: publish versions to a
+     VersionStore (retention via --gc-keep), then warm hot-swap the live
+     registry row to a pinned version while async requests are pending —
+     every future resolves, post-swap labels come from the new version,
+     and the SwapReport's measured flip/warm numbers are printed,
+  7. with --sharded, run the extension matmul mesh-sharded over all local
      devices (set XLA_FLAGS=--xla_force_host_platform_device_count=8 to
      fake a CPU mesh) and verify it matches the single-device path.
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.serve_cluster --smoke
+  PYTHONPATH=src python -m repro.launch.serve_cluster --smoke --swap
   PYTHONPATH=src python -m repro.launch.serve_cluster --n 8000 --r 2 \
       --batch-sizes 64,512,4096 --queries 8192 --bench all --slo-ms 250
 """
@@ -55,8 +60,14 @@ def main():
                     help="synthetic queries for the equality check")
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--bench", default="all",
-                    choices=["sync", "async", "fused", "all"],
+                    choices=["sync", "async", "fused", "swap", "all"],
                     help="which benchmark modes land in BENCH_serve.json")
+    ap.add_argument("--swap", action="store_true",
+                    help="exercise the model lifecycle: publish versions, "
+                         "warm hot-swap under pending async traffic, GC")
+    ap.add_argument("--gc-keep", type=int, default=None,
+                    help="VersionStore retention for --swap: keep the "
+                         "last K published versions")
     ap.add_argument("--fused-embed", default="auto",
                     choices=["auto", "on", "off"],
                     help="extension stripe engine for the benches: fused "
@@ -162,6 +173,51 @@ def main():
     print(f"async == sync on {args.queries} queries "
           f"({sched.latency.requests} requests recorded)")
 
+    # Check 4 (--swap): model lifecycle — publish versions, GC, warm
+    # hot-swap the live row while async requests are pending.
+    if args.swap:
+        from repro.serve import VersionStore
+        if args.gc_keep is not None and args.gc_keep < 1:
+            ap.error("--gc-keep must be >= 1")
+        store = VersionStore(args.artifact_dir + "_versions",
+                             keep=args.gc_keep)
+        v1 = store.publish(model)
+        v2 = store.publish(model)
+        # A distinguishable refresh, published LAST so it survives any
+        # --gc-keep >= 1: flipping the centroid rows permutes the labels,
+        # so post-swap labels prove which version served.
+        model_b = model._replace(centroids=model.centroids[::-1])
+        v3 = store.publish(model_b)
+        print(f"published v{v1}, v{v2}, v{v3} -> {store.versions()}"
+              + (f" (keep={args.gc_keep})" if args.gc_keep else ""))
+        if args.gc_keep:
+            assert len(store.versions()) <= args.gc_keep, \
+                f"GC kept {store.versions()}, wanted <= {args.gc_keep}"
+        served_b = store.load(v3)                 # pinned-version read
+        w = min(args.queries, 64)
+        swap_splits = [w // 3, 2 * w // 3] if w >= 3 else []
+        parts = np.split(np.asarray(Xq[:, :w]), swap_splits, axis=1)
+        pending = [sched.submit(part) for part in parts]
+        report = DEFAULT_REGISTRY.swap("demo", served_b, version=v3)
+        assert all(f.done() for f in pending), \
+            "swap stranded pending futures"
+        old_labels = np.concatenate([f.result()[0] for f in pending])
+        assert np.array_equal(old_labels,
+                              np.asarray(labels_bucketed[:w])), \
+            "pre-swap requests must resolve against the old version"
+        sched2 = DEFAULT_REGISTRY.scheduler("demo")
+        futs = [sched2.submit(part) for part in parts]
+        sched2.flush()
+        new_labels = np.concatenate([f.result()[0] for f in futs])
+        want_new, _ = assign(served_b, Xq[:, :w])
+        assert np.array_equal(new_labels, np.asarray(want_new)), \
+            "post-swap requests must resolve against the new version"
+        print(f"warm swap v{report.old_version} -> v{report.new_version}: "
+              f"flip {report.flip_ms:.3f} ms, warm {report.warm_s:.3f} s "
+              f"(buckets {report.buckets_warmed}), drained "
+              f"{report.drained_requests} pending requests into the old "
+              f"model; p95 before {report.p95_before_ms:.2f} ms")
+
     # Optional: the mesh-sharded extension path against the local mesh.
     mesh = None
     if args.sharded:
@@ -183,7 +239,7 @@ def main():
     batch_sizes = [int(b) for b in args.batch_sizes.split(",") if b.strip()]
     if not batch_sizes:
         ap.error(f"--batch-sizes {args.batch_sizes!r} parses to nothing")
-    modes = (("sync", "async", "fused") if args.bench == "all"
+    modes = (("sync", "async", "fused", "swap") if args.bench == "all"
              else (args.bench,))
     embed_fused = {"auto": None, "on": True, "off": False}[args.fused_embed]
     from repro.serve import median_benches

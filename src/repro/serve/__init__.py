@@ -18,10 +18,16 @@ a deployable service:
   batcher.py    micro-batching with power-of-two shape buckets so variable
                 query traffic never retraces; coalescing request queue
   scheduler.py  AsyncBatcher: futures per request, deadline-driven flush
-                (max_wait_ms or full bucket), SLO-accounted
+                (max_wait_ms or full bucket), SLO-accounted; stop()
+                retires it (post-stop submits raise, never strand)
   latency.py    streaming latency histogram: p50/p95/p99, SLO violations
-  registry.py   multi-model registry: one process, many fitted models
-  bench.py      sync/async/sharded benchmarks -> BENCH_serve.json
+  registry.py   multi-model registry + lifecycle: one process, many
+                fitted models; warm hot-swap (swap() pre-warms the new
+                row's executables, flips atomically, drains the old
+                scheduler — SwapReport measures the flip)
+  versions.py   versioned artifact store: <root>/v_<N>/ on the atomic
+                checkpoint commit; publish / pinned loads / keep-last-K GC
+  bench.py      sync/async/sharded/swap benchmarks -> BENCH_serve.json
 
 CLI: `python -m repro.launch.serve_cluster --smoke` round-trips
 fit -> save -> load -> query; `--bench async` reports latency percentiles.
@@ -31,22 +37,30 @@ from repro.serve.artifact import (FittedModel, ModelSpec, fit_model,
                                   load_model, save_model)
 from repro.serve.batcher import MicroBatcher, bucket_size
 from repro.serve.bench import (benchmark_assign, benchmark_async,
-                               benchmark_fused, format_bench,
-                               median_benches, run_benches, write_bench)
+                               benchmark_fused, benchmark_swap,
+                               format_bench, median_benches, run_benches,
+                               write_bench)
 from repro.serve.extend import (Extender, ShardedExtender, assign, embed,
                                 embed_sharded, resolve_pallas_path)
 from repro.serve.latency import LatencyStats
-from repro.serve.registry import DEFAULT_REGISTRY, ModelRegistry
+from repro.serve.registry import (DEFAULT_REGISTRY, ModelRegistry,
+                                  SwapReport)
 from repro.serve.scheduler import AsyncBatcher
+from repro.serve.versions import (VersionStore, gc_versions,
+                                  latest_version, load_version,
+                                  publish_version)
 
 __all__ = [
     "FittedModel", "ModelSpec", "fit_model", "load_model", "save_model",
     "MicroBatcher", "bucket_size",
     "benchmark_assign", "benchmark_async", "benchmark_fused",
+    "benchmark_swap",
     "format_bench", "median_benches", "run_benches", "write_bench",
     "Extender", "ShardedExtender", "assign", "embed", "embed_sharded",
     "resolve_pallas_path",
     "LatencyStats",
-    "DEFAULT_REGISTRY", "ModelRegistry",
+    "DEFAULT_REGISTRY", "ModelRegistry", "SwapReport",
     "AsyncBatcher",
+    "VersionStore", "gc_versions", "latest_version", "load_version",
+    "publish_version",
 ]

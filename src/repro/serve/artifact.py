@@ -18,20 +18,24 @@ plus a static `ModelSpec` (kernel name/params, dimensions, sketch type).
 On-disk artifact format (built on repro.distributed.checkpoint):
 
     <dir>/spec.json        ModelSpec (static metadata)
+    <dir>/leaves.json      explicit leaf names of the array state, in
+                           checkpoint leaf order (sorted dict keys)
     <dir>/step_0/          atomic checkpoint of the array state
         manifest.json      flat-dict paths, shapes, dtypes
         leaf_<i>.npy       one file per array
 
 save/load reuse the checkpoint layer's atomic-rename commit, so a reader
 never observes a half-written artifact, and `read_manifest` rebuilds the
-restore skeleton without guessing shapes.
+restore skeleton without guessing shapes. Versioned deployments layer
+`serve/versions.py` on top of this format (one artifact dir per v_<N>).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import pathlib
-from typing import Dict, NamedTuple, Optional
+import re
+from typing import Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -144,10 +148,43 @@ def save_model(model: FittedModel, artifact_dir: str) -> str:
     """Persist atomically; returns the artifact directory."""
     base = pathlib.Path(artifact_dir)
     base.mkdir(parents=True, exist_ok=True)
-    ckpt.save_checkpoint(str(base), step=0, state=_array_state(model),
-                         blocking=True)
+    state = _array_state(model)
+    ckpt.save_checkpoint(str(base), step=0, state=state, blocking=True)
+    # Explicit leaf names, in checkpoint leaf order (jax flattens a dict
+    # in sorted-key order) — load_model must not have to reverse-engineer
+    # names out of jax.tree_util.keystr formatting.
+    (base / "leaves.json").write_text(
+        json.dumps({"names": sorted(state)}))
     (base / "spec.json").write_text(model.spec.to_json())
     return str(base)
+
+
+# Pre-leaves.json artifacts only carry keystr-formatted paths like
+# "['X_train']"; match the quoted dict key rather than strip()ing
+# characters off both ends (which also eats legitimate quote/bracket
+# characters inside a name).
+_KEYSTR_RE = re.compile(r"\['([^\]]+)'\]")
+
+
+def _leaf_names(base: pathlib.Path, manifest: Dict) -> List[str]:
+    """Leaf names of the artifact's flat array dict, in leaf order.
+
+    Read from leaves.json when present; legacy artifacts (written before
+    names were persisted) fall back to parsing the manifest's keystr
+    paths."""
+    names_file = base / "leaves.json"
+    if names_file.exists():
+        names = json.loads(names_file.read_text())["names"]
+    else:
+        names = []
+        for path in manifest["paths"]:
+            m = _KEYSTR_RE.fullmatch(path)
+            names.append(m.group(1) if m else path)
+    missing = {"X_train", "U", "eigvals", "centroids"} - set(names)
+    if missing:
+        raise ValueError(f"artifact at {base} lacks required leaves "
+                         f"{sorted(missing)}; found {names}")
+    return names
 
 
 def load_model(artifact_dir: str) -> FittedModel:
@@ -155,9 +192,9 @@ def load_model(artifact_dir: str) -> FittedModel:
     spec = ModelSpec.from_json((base / "spec.json").read_text())
     manifest = ckpt.read_manifest(str(base), step=0)
     state_like = {}
-    for path, shape, dtype in zip(manifest["paths"], manifest["shapes"],
+    for name, shape, dtype in zip(_leaf_names(base, manifest),
+                                  manifest["shapes"],
                                   manifest["dtypes"]):
-        name = path.strip("[]'\"")
         state_like[name] = jnp.zeros(shape, dtype=dtype)
     state, _ = ckpt.restore_checkpoint(str(base), state_like, step=0)
     return FittedModel(spec=spec, X_train=state["X_train"], U=state["U"],

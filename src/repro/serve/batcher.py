@@ -121,6 +121,24 @@ class MicroBatcher:
             self.stats["bucket_hits"].get(bsz, 0) + 1
         return np.asarray(lab[:w]), np.asarray(d2[:w])
 
+    def warm(self, buckets) -> List[int]:
+        """Compile the executables for the given bucket widths now.
+
+        Runs one zero batch per distinct pow-2-clamped bucket through the
+        real bucketed path, so the compile cost is paid here — off the
+        serving path — and the buckets land in stats["bucket_hits"]
+        exactly like traffic would put them there. This is how a warm
+        hot-swap (registry.swap) replays the outgoing row's bucket
+        history into the incoming row before the flip. Returns the
+        bucket sizes warmed, ascending.
+        """
+        warmed = []
+        for b in sorted({bucket_size(int(b), self.min_bucket,
+                                     self.max_bucket) for b in buckets}):
+            self.assign_batch(np.zeros((self.model.spec.p, b), np.float32))
+            warmed.append(b)
+        return warmed
+
     # -- coalescing request queue ----------------------------------------
 
     def validate_request(self, Xq) -> np.ndarray:

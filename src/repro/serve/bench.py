@@ -1,6 +1,6 @@
-"""Serving benchmarks: sync/async/fused-stripe, single-device or sharded.
+"""Serving benchmarks: sync/async/fused-stripe/swap, single-device or sharded.
 
-Four modes, all landing in BENCH_serve.json:
+Five modes, all landing in BENCH_serve.json:
 
   sync     `benchmark_assign` — bucketed assignments/sec per batch size
            through MicroBatcher (one warmup call per size pays compile);
@@ -12,6 +12,10 @@ Four modes, all landing in BENCH_serve.json:
            executables, plus the per-stripe HBM-traffic delta (two-pass
            measured by launch/hlo_analysis, fused from the kernel's
            static memory contract);
+  swap     `benchmark_swap` — async traffic with a warm hot-swap
+           (registry.swap) in the middle: measured flip duration plus
+           p95 before/after from the surviving LatencyStats, so swap
+           downtime is a number, not a claim;
   sharded  sync/async with mesh= set — the extension matmul runs through
            serve.extend.ShardedExtender on the given mesh.
 
@@ -27,7 +31,11 @@ Schema (write_bench):
                "latency": <LatencyStats.summary()>},       # async mode only
      "fused": {"fused": {...}, "two_pass": {...}, "speedup": ...,
                "hbm": {"two_pass_bytes": ..., "fused_bytes": ...,
-                       "saved_bytes": ..., "saved_ratio": ...}}}
+                       "saved_bytes": ..., "saved_ratio": ...}},
+     "swap": {"flip_ms": ..., "warm_s": ..., "drain_s": ...,
+              "buckets_warmed": [...], "drained_requests": ...,
+              "p95_before_ms": ..., "p95_after_ms": ...,
+              "stranded_futures": 0}}
 """
 from __future__ import annotations
 
@@ -43,6 +51,7 @@ import numpy as np
 from repro.serve.artifact import FittedModel
 from repro.serve.batcher import MicroBatcher, bucket_size
 from repro.serve.extend import Extender
+from repro.serve.registry import ModelRegistry
 from repro.serve.scheduler import AsyncBatcher
 
 
@@ -184,6 +193,88 @@ def benchmark_async(model: FittedModel,
     }
 
 
+def benchmark_swap(model: FittedModel,
+                   new_model: Optional[FittedModel] = None,
+                   n_requests: int = 128,
+                   width_range: Sequence[int] = (1, 64),
+                   max_wait_ms: float = 2.0,
+                   slo_ms: float = 250.0,
+                   key: Optional[jax.Array] = None,
+                   block: Optional[int] = None,
+                   fused: Optional[bool] = None,
+                   embed_fused: Optional[bool] = None,
+                   interpret: Optional[bool] = None,
+                   max_bucket: int = 1024) -> Dict:
+    """Async traffic with a warm hot-swap in the middle; measures the flip.
+
+    Half the requests run against the original model, registry.swap()
+    flips to `new_model` (default: a re-wrap of the same fit — the
+    same-spec refresh case every real redeploy hits), the other half run
+    against the swapped-in row. All timing comes from the surviving
+    LatencyStats, so p95_before/p95_after are directly comparable — the
+    after number includes the before samples (cumulative histogram): a
+    swap that stalled traffic shows up as p95_after >> p95_before.
+    Every future is checked resolved; `stranded_futures` must be 0.
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    rng = np.random.RandomState(
+        int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    lo, hi = int(width_range[0]), int(width_range[1])
+    widths = rng.randint(lo, hi + 1, size=n_requests)
+    queries = rng.randn(model.spec.p, int(widths.sum())).astype(np.float32)
+
+    reg = ModelRegistry()
+    reg.register("swap-bench", model, version=1)
+    sched = reg.scheduler("swap-bench", max_wait_ms=max_wait_ms,
+                          slo_ms=slo_ms, block=block, fused=fused,
+                          embed_fused=embed_fused, interpret=interpret,
+                          max_bucket=max_bucket)
+    # Warmup as in benchmark_async: compile every reachable bucket so the
+    # percentiles measure steady-state serving (and the swap's warm phase
+    # has a full bucket history to replay).
+    bsz = sched.batcher.min_bucket
+    while bsz <= max_bucket:
+        sched.batcher.assign_batch(
+            jnp.zeros((model.spec.p, bsz), jnp.float32))
+        bsz *= 2
+
+    half = n_requests // 2
+    pend_n = min(4, half)
+    futures = []
+    off = 0
+
+    def drive(target, lo_i, hi_i, flush=True):
+        nonlocal off
+        for w in widths[lo_i:hi_i]:
+            futures.append(target.submit(queries[:, off:off + w]))
+            off += w
+            if flush:
+                target.poll()
+        if flush:
+            target.flush()
+
+    t0 = time.perf_counter()
+    drive(sched, 0, half - pend_n)
+    # The last pre-swap requests stay PENDING at flip time: the swap's
+    # drain — not a client flush — must resolve them through the old
+    # model, so drained_requests measures the real pending-at-flip path.
+    drive(sched, half - pend_n, half, flush=False)
+    report = reg.swap("swap-bench",
+                      new_model if new_model is not None
+                      else model._replace(), version=2)
+    sched2 = reg.scheduler("swap-bench")
+    drive(sched2, half, n_requests)
+    wall = time.perf_counter() - t0
+    report.p95_after_ms = sched2.latency.total.percentile(95.0)
+    stranded = sum(not f.done() for f in futures)
+    out = {"mode": "swap", "n_requests": int(n_requests),
+           "width_range": [lo, hi], "max_wait_ms": float(max_wait_ms),
+           "wall_s": wall, "stranded_futures": int(stranded)}
+    out.update({k: v for k, v in report.to_dict().items()
+                if k not in ("name", "old_version", "new_version")})
+    return out
+
+
 def _stripe_hbm_traffic(model: FittedModel, width: int) -> Dict:
     """Per-stripe HBM traffic: two-pass measured vs fused kernel contract.
 
@@ -322,6 +413,15 @@ def run_benches(model: FittedModel, modes: Sequence[str] = ("sync", "async"),
         bench["fused"] = benchmark_fused(
             model, repeats=repeats, key=key, block=block,
             interpret=interpret)
+    if "swap" in modes:
+        # Single-device: the swap path itself is mesh-agnostic (the new
+        # row is rebuilt with the old row's kwargs, mesh included), and
+        # the flip/drain numbers are what this section is for.
+        bench["swap"] = benchmark_swap(
+            model, n_requests=max(n_requests // 2, 32),
+            max_wait_ms=max_wait_ms, slo_ms=slo_ms, key=key, block=block,
+            fused=fused, embed_fused=embed_fused, interpret=interpret,
+            max_bucket=max_bucket)
     return bench
 
 
@@ -368,6 +468,14 @@ def format_bench(bench: Dict) -> str:
                      f"p50 {lat['p50']:.2f} ms  p95 {lat['p95']:.2f} ms  "
                      f"p99 {lat['p99']:.2f} ms  SLO violations "
                      f"{a['latency']['slo_violations']}")
+    if "swap" in bench:
+        s = bench["swap"]
+        after = (f"{s['p95_after_ms']:.2f}"
+                 if s.get("p95_after_ms") is not None else "—")
+        lines.append(
+            f"swap: flip {s['flip_ms']:.3f} ms  warm {s['warm_s']:.3f} s "
+            f"(buckets {s['buckets_warmed']})  p95 {s['p95_before_ms']:.2f}"
+            f" -> {after} ms  stranded futures {s['stranded_futures']}")
     if "fused" in bench:
         f = bench["fused"]
         hbm = f["hbm"]

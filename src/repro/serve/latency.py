@@ -34,14 +34,29 @@ from typing import Dict, List, Optional
 _LO_MS = 1e-3
 _HI_MS = 1e5
 _PER_DECADE = 16
-_N_BUCKETS = int(math.log10(_HI_MS / _LO_MS)) * _PER_DECADE
+# round(), not int(): the decade count is an exact integer mathematically
+# (the range is a power-of-10 ratio), but float log10 may land at
+# 7.999999... on some libms and int() would silently drop a whole decade
+# of buckets.
+_N_BUCKETS = round(math.log10(_HI_MS / _LO_MS)) * _PER_DECADE
 
 
 def _bucket_index(ms: float) -> int:
     if ms <= _LO_MS:
         return 0
-    idx = int(math.log10(ms / _LO_MS) * _PER_DECADE)
-    return min(idx, _N_BUCKETS - 1)
+    # int() truncation mis-buckets samples sitting exactly on a bucket
+    # edge (log10 of an edge value can land just below the integer).
+    # round() is within one bucket of the true floor; the compare against
+    # the recomputed edges — the same float expressions that define the
+    # buckets — settles it exactly, edges included.
+    idx = int(round(math.log10(ms / _LO_MS) * _PER_DECADE))
+    idx = min(max(idx, 0), _N_BUCKETS - 1)
+    lo, hi = _bucket_edges(idx)
+    if ms < lo:
+        idx -= 1
+    elif ms >= hi:
+        idx += 1
+    return min(max(idx, 0), _N_BUCKETS - 1)
 
 
 def _bucket_edges(idx: int) -> tuple:

@@ -85,6 +85,7 @@ class AsyncBatcher:
         self._flush_lock = threading.Lock()   # serializes inner drains
         self._thread: Optional[threading.Thread] = None
         self._stop_event = threading.Event()
+        self._stopped = False
         # Pump-thread health: a flush that raises has already delivered
         # the exception to that batch's futures; the pump must survive to
         # serve later requests. Counter + last error are the monitoring
@@ -104,6 +105,15 @@ class AsyncBatcher:
         Xq = self.batcher.validate_request(Xq)
         fut: Future = Future()
         with self._lock:
+            # Checked under the lock so a submit racing stop() either
+            # lands in the queue stop() is about to flush, or raises —
+            # it can never enqueue into a retired, pump-less batcher
+            # where the future would be stranded forever.
+            if self._stopped:
+                raise RuntimeError(
+                    "submit() on a stopped AsyncBatcher: nothing would "
+                    "ever flush this request (after a hot-swap, get the "
+                    "current scheduler from the registry)")
             self._queue.append(_Pending(Xq, fut, self.clock()))
             full = self._pending_width_locked() >= self.batcher.max_bucket
         if full:
@@ -200,8 +210,20 @@ class AsyncBatcher:
 
     # -- background pump -------------------------------------------------
 
+    @property
+    def running(self) -> bool:
+        """True while the background pump thread is alive."""
+        return self._thread is not None
+
+    @property
+    def stopped(self) -> bool:
+        """True once stop() retired this batcher (submits now raise)."""
+        return self._stopped
+
     def start(self) -> "AsyncBatcher":
         """Spawn the daemon pump thread (poll() every max_wait_ms / 4)."""
+        if self._stopped:
+            raise RuntimeError("cannot start a stopped AsyncBatcher")
         if self._thread is not None:
             raise RuntimeError("pump thread already running")
         self._stop_event.clear()
@@ -220,13 +242,18 @@ class AsyncBatcher:
         self._thread.start()
         return self
 
-    def stop(self) -> None:
-        """Stop the pump thread and flush whatever is still pending."""
+    def stop(self) -> int:
+        """Retire this batcher: stop the pump, flush pending, reject
+        all later submits. Idempotent — a second stop() is a no-op that
+        flushes an empty queue. Returns the requests flushed by THIS
+        call (what a hot-swap drained into the outgoing model)."""
+        with self._lock:
+            self._stopped = True
         if self._thread is not None:
             self._stop_event.set()
             self._thread.join()
             self._thread = None
-        self.flush()
+        return self.flush()
 
     def __enter__(self) -> "AsyncBatcher":
         return self.start()

@@ -1,0 +1,382 @@
+"""Model lifecycle: versioned artifact store, warm hot-swap, and the
+serving-path regression sweep (latency bucket edges, registry kwargs
+conflicts, artifact leaf names, post-stop submits). CI's serve-smoke job
+runs this file on its own as the registry/lifecycle smoke."""
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import blob_ring
+from repro.serve import (AsyncBatcher, MicroBatcher, ModelRegistry,
+                         VersionStore, fit_model, latest_version,
+                         load_model, load_version, publish_version,
+                         save_model)
+from repro.serve import latency as lat
+
+N, P, R, K, BLOCK = 250, 2, 2, 2, 64
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+@pytest.fixture(scope="module")
+def model():
+    X, _ = blob_ring(jax.random.PRNGKey(0), n=N)
+    return fit_model(jax.random.PRNGKey(1), X, k=K, r=R,
+                     kernel="polynomial",
+                     kernel_params={"gamma": 0.0, "degree": 2},
+                     oversampling=10, block=BLOCK)
+
+
+@pytest.fixture(scope="module")
+def model_b(model):
+    """Same fit, centroid rows flipped: labels permute 0<->1, so a test
+    can tell which model version served a request."""
+    return model._replace(centroids=model.centroids[::-1])
+
+
+def _requests(widths, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randn(P, w).astype(np.float32) for w in widths]
+
+
+# ---------------------------------------------------------------------------
+# versioned artifact store
+# ---------------------------------------------------------------------------
+
+def test_version_store_publish_latest_pinned(model, model_b, tmp_path):
+    store = VersionStore(str(tmp_path / "store"))
+    assert store.versions() == [] and store.latest() is None
+    with pytest.raises(FileNotFoundError):
+        store.path()
+    v1 = store.publish(model)
+    v2 = store.publish(model_b)
+    assert (v1, v2) == (1, 2)
+    assert store.versions() == [1, 2] and store.latest() == 2
+    # Pinned read of v1 vs latest: centroids differ by the row flip.
+    np.testing.assert_array_equal(np.asarray(store.load(1).centroids),
+                                  np.asarray(model.centroids))
+    np.testing.assert_array_equal(np.asarray(store.load().centroids),
+                                  np.asarray(model_b.centroids))
+
+
+def test_version_store_gc_keeps_last_k(model, tmp_path):
+    store = VersionStore(str(tmp_path / "store"))
+    for _ in range(5):
+        store.publish(model)
+    removed = store.gc(keep=2)
+    assert removed == [1, 2, 3]
+    assert store.versions() == [4, 5]
+    store.load(4)                              # survivors still load
+    with pytest.raises(FileNotFoundError):
+        store.load(2)                          # GC'ed pin fails loudly
+    # Version numbers are never reused after GC.
+    assert store.publish(model) == 6
+    with pytest.raises(ValueError):
+        store.gc(keep=0)
+
+
+def test_version_store_publish_keep_inline(model, tmp_path):
+    store = VersionStore(str(tmp_path / "store"), keep=2)
+    for _ in range(4):
+        store.publish(model)                   # constructor keep applies
+    assert store.versions() == [3, 4]
+
+
+def test_version_store_ignores_inflight_and_junk(model, tmp_path):
+    import os
+    import time as time_mod
+
+    root = tmp_path / "store"
+    store = VersionStore(str(root))
+    store.publish(model)
+    (root / "v_9.tmp").mkdir()                 # crashed publish (stale)
+    old = time_mod.time() - 7200
+    os.utime(root / "v_9.tmp", (old, old))
+    (root / "v_8.tmp").mkdir()                 # in-flight publish (fresh)
+    (root / "not_a_version").mkdir()
+    (root / "v_7").mkdir()                     # no spec.json: incomplete
+    assert store.versions() == [1]
+    assert store.latest() == 1
+    store.gc(keep=1)
+    assert not (root / "v_9.tmp").exists()     # stale crash swept
+    assert (root / "v_8.tmp").exists()         # live writer left alone
+
+
+def test_version_store_publish_never_clobbers_existing_dir(model, tmp_path):
+    """A publisher losing the allocation race (or hitting junk at its
+    target number) must take the next free number, not replace the
+    committed directory."""
+    root = tmp_path / "store"
+    store = VersionStore(str(root))
+    store.publish(model)                       # v_1
+    blocker = root / "v_2"                     # another writer's commit /
+    blocker.mkdir()                            # junk: invisible to scan
+    (blocker / "marker").write_text("keep me")
+    v = store.publish(model)
+    assert v == 3                              # bumped past the blocker
+    assert (blocker / "marker").read_text() == "keep me"
+    assert store.versions() == [1, 3]
+    store.load(3)
+
+
+# ---------------------------------------------------------------------------
+# warm hot-swap
+# ---------------------------------------------------------------------------
+
+def test_swap_under_load_resolves_every_future(model, model_b):
+    """Async traffic on a fake clock while swap() flips versions: every
+    future resolves, labels match the version that served them, and no
+    bucket executable recompiles after warm-up."""
+    reg = ModelRegistry()
+    reg.register("m", model, version=1)
+    clock = FakeClock()
+    sched = reg.scheduler("m", max_wait_ms=5.0, clock=clock, max_bucket=128)
+    reqs = _requests([3, 17, 40, 9, 26], seed=7)
+
+    # Expected labels per request through each version.
+    want_old, want_new = [], []
+    for engine, want in ((MicroBatcher(model, max_bucket=128), want_old),
+                         (MicroBatcher(model_b, max_bucket=128), want_new)):
+        for r in reqs:
+            engine.submit(r)
+        want.extend(lab for lab, _ in engine.drain())
+
+    # Phase 1: deadline-driven traffic against v1, two flush rounds that
+    # compile buckets 32 (20 cols) and 128 (75 cols).
+    done = [sched.submit(r) for r in reqs[:2]]
+    clock.advance_ms(6.0)
+    assert sched.poll() == 2
+    done += [sched.submit(r) for r in reqs[2:]]
+    clock.advance_ms(6.0)
+    assert sched.poll() == 3
+    assert sched.batcher.executables == [32, 128]
+    # Phase 2: requests still pending (same widths as round one — inside
+    # the recorded bucket history) when the swap flips.
+    pending = [sched.submit(r) for r in reqs[:2]]
+    report = reg.swap("m", model_b, version=2)
+    # The drain resolved the pending futures against the OLD model.
+    assert report.drained_requests == 2
+    assert all(f.done() for f in done + pending)
+    for f, want in zip(done + pending, want_old + want_old[:2]):
+        np.testing.assert_array_equal(f.result(timeout=0)[0], want)
+    # The retired handle rejects submits instead of stranding futures.
+    with pytest.raises(RuntimeError):
+        sched.submit(reqs[0])
+
+    # Phase 3: the swapped-in scheduler serves v2 — with the surviving
+    # LatencyStats and the warmed executables.
+    sched2 = reg.scheduler("m")
+    assert sched2 is not sched
+    assert sched2.latency is sched.latency
+    assert sched2.latency.requests == 7
+    execs_after_warmup = list(sched2.batcher.executables)
+    assert execs_after_warmup == report.buckets_warmed
+    futs = [sched2.submit(r) for r in reqs]
+    clock.advance_ms(6.0)
+    assert sched2.poll() == 5
+    for f, want in zip(futs, want_new):
+        np.testing.assert_array_equal(f.result(timeout=0)[0], want)
+    # Post-warm-up traffic hit only pre-compiled buckets: no recompiles.
+    assert list(sched2.batcher.executables) == execs_after_warmup
+    assert reg.version("m") == 2
+    assert report.flip_ms >= 0.0
+    assert report.p95_before_ms >= 0.0
+
+
+def test_swap_warms_sync_batcher_and_keeps_kwargs(model, model_b):
+    reg = ModelRegistry()
+    reg.register("m", model)
+    b1 = reg.batcher("m", max_bucket=64, min_bucket=8)
+    for w in (3, 30, 64):
+        b1.assign_batch(np.asarray(_requests([w])[0]))
+    assert b1.executables == [8, 32, 64]
+    report = reg.swap("m", model_b)
+    b2 = reg.batcher("m")
+    assert b2 is not b1
+    # Same construction kwargs carried over; all old buckets pre-warmed.
+    assert b2.max_bucket == 64 and b2.min_bucket == 8
+    assert b2.executables == [8, 32, 64] == report.buckets_warmed
+    labels, _ = b2.assign_batch(np.asarray(_requests([30])[0]))
+    assert labels.shape == (30,)
+    assert b2.executables == [8, 32, 64]       # no new executable
+    # A swap with conflicting kwargs later still raises on lookup.
+    with pytest.raises(ValueError):
+        reg.batcher("m", max_bucket=128)
+
+
+def test_swap_restarts_running_pump(model, model_b):
+    reg = ModelRegistry()
+    reg.register("m", model)
+    sched = reg.scheduler("m", max_wait_ms=1.0, max_bucket=128)
+    sched.start()
+    fut = sched.submit(_requests([4])[0])
+    fut.result(timeout=30.0)
+    reg.swap("m", model_b)
+    assert not sched.running                   # old pump stopped
+    sched2 = reg.scheduler("m")
+    assert sched2.running                      # pump carried over
+    fut2 = sched2.submit(_requests([6])[0])
+    labels, _ = fut2.result(timeout=30.0)      # no poll: pump flushes
+    assert labels.shape == (6,)
+    reg.unregister("m")
+    assert not sched2.running
+
+
+def test_swap_missing_name_raises(model):
+    with pytest.raises(KeyError):
+        ModelRegistry().swap("ghost", model)
+
+
+# ---------------------------------------------------------------------------
+# [bugfix] serve/latency.py: bucket count + edge indexing
+# ---------------------------------------------------------------------------
+
+def test_latency_bucket_count_exact():
+    # 1e-3 .. 1e5 ms is exactly 8 decades; int(log10(1e8)) could truncate
+    # to 7 on libms where log10 lands at 7.999..., silently dropping a
+    # decade of buckets.
+    assert lat._N_BUCKETS == 8 * lat._PER_DECADE
+
+
+def test_latency_bucket_edges_index_exactly():
+    for i in range(lat._N_BUCKETS):
+        edge = lat._LO_MS * 10.0 ** (i / lat._PER_DECADE)
+        assert lat._bucket_index(edge) == i, f"edge {i} mis-bucketed"
+        lo, hi = lat._bucket_edges(i)
+        assert lo <= edge < hi
+        # Just inside the bucket interior lands in the same bucket.
+        assert lat._bucket_index(edge * 1.01) == i
+    assert lat._bucket_index(0.0) == 0
+    assert lat._bucket_index(lat._LO_MS) == 0
+    assert lat._bucket_index(1e12) == lat._N_BUCKETS - 1
+
+
+def test_latency_edge_sample_percentile_consistent():
+    stats = lat.Histogram()
+    edge = lat._LO_MS * 10.0 ** (32 / lat._PER_DECADE)   # an exact edge
+    for _ in range(100):
+        stats.record(edge)
+    # All mass sits in one bucket whose clamped percentile is the sample.
+    assert stats.percentile(50.0) == pytest.approx(edge)
+    assert stats.percentile(99.0) == pytest.approx(edge)
+
+
+# ---------------------------------------------------------------------------
+# [bugfix] registry kwargs conflicts on cache hits
+# ---------------------------------------------------------------------------
+
+def test_registry_batcher_kwargs_conflict_raises(model):
+    reg = ModelRegistry()
+    reg.register("m", model)
+    b = reg.batcher("m", max_bucket=64)
+    assert reg.batcher("m") is b                        # bare hit: fine
+    assert reg.batcher("m", max_bucket=64) is b         # same kwargs: fine
+    with pytest.raises(ValueError, match="conflicting override"):
+        reg.batcher("m", max_bucket=128)
+    with pytest.raises(ValueError, match="conflicting override"):
+        reg.batcher("m", interpret=True)                # not recorded
+
+
+def test_registry_scheduler_kwargs_conflict_raises(model):
+    reg = ModelRegistry()
+    reg.register("m", model)
+    clock = FakeClock()
+    s = reg.scheduler("m", max_wait_ms=2.0, clock=clock)
+    assert reg.scheduler("m") is s
+    assert reg.scheduler("m", max_wait_ms=2.0, clock=clock) is s
+    with pytest.raises(ValueError, match="conflicting override"):
+        reg.scheduler("m", max_wait_ms=999.0)
+    reg.unregister("m")
+
+
+# ---------------------------------------------------------------------------
+# [bugfix] artifact leaf names persisted explicitly
+# ---------------------------------------------------------------------------
+
+def test_artifact_persists_leaf_names(model, tmp_path):
+    path = pathlib.Path(save_model(model, str(tmp_path / "a")))
+    names = json.loads((path / "leaves.json").read_text())["names"]
+    assert set(names) == {"X_train", "U", "eigvals", "centroids",
+                          "sketch_signs", "sketch_rows"}
+    loaded = load_model(str(path))
+    np.testing.assert_array_equal(np.asarray(loaded.U),
+                                  np.asarray(model.U))
+    np.testing.assert_array_equal(np.asarray(loaded.X_train),
+                                  np.asarray(model.X_train))
+
+
+def test_artifact_legacy_without_leaves_json(model, tmp_path):
+    """Artifacts written before leaves.json existed still load via the
+    keystr-path fallback."""
+    path = pathlib.Path(save_model(model, str(tmp_path / "a")))
+    (path / "leaves.json").unlink()
+    loaded = load_model(str(path))
+    np.testing.assert_array_equal(np.asarray(loaded.centroids),
+                                  np.asarray(model.centroids))
+    np.testing.assert_array_equal(np.asarray(loaded.eigvals),
+                                  np.asarray(model.eigvals))
+
+
+# ---------------------------------------------------------------------------
+# [bugfix] scheduler: post-stop submits rejected, stop idempotent
+# ---------------------------------------------------------------------------
+
+def test_submit_after_stop_rejected_not_stranded(model):
+    ab = AsyncBatcher(model, clock=FakeClock(), max_bucket=128)
+    fut = ab.submit(_requests([4])[0])
+    assert ab.stop() == 1                      # stop flushes pending
+    assert fut.done()
+    with pytest.raises(RuntimeError, match="stopped"):
+        ab.submit(_requests([4])[0])           # would never flush
+    assert ab.stop() == 0                      # idempotent
+    with pytest.raises(RuntimeError):
+        ab.start()                             # a stopped batcher is dead
+
+
+def test_context_manager_stop_is_terminal(model):
+    with AsyncBatcher(model, max_wait_ms=1.0, max_bucket=128) as ab:
+        ab.submit(_requests([3])[0]).result(timeout=30.0)
+    assert ab.stopped and not ab.running
+    with pytest.raises(RuntimeError):
+        ab.submit(_requests([3])[0])
+
+
+# ---------------------------------------------------------------------------
+# registry versioned-store integration
+# ---------------------------------------------------------------------------
+
+def test_registry_publish_and_load_version(model, model_b, tmp_path):
+    root = str(tmp_path / "store")
+    reg = ModelRegistry()
+    reg.register("m", model)
+    assert reg.version("m") is None
+    v1 = reg.publish("m", root)
+    assert v1 == 1 and reg.version("m") == 1
+    reg.register("m", model_b, overwrite=True)
+    v2 = reg.publish("m", root, keep=2)
+    assert v2 == 2
+    # module-level conveniences agree with the store
+    assert latest_version(root) == 2
+    pinned = load_version(root, 1)
+    np.testing.assert_array_equal(np.asarray(pinned.centroids),
+                                  np.asarray(model.centroids))
+    # load_version registers + tags the row
+    reg2 = ModelRegistry()
+    reg2.load_version("m", root)
+    assert reg2.version("m") == 2
+    reg2.load_version("pinned", root, version=1)
+    np.testing.assert_array_equal(np.asarray(reg2.get("pinned").centroids),
+                                  np.asarray(model.centroids))
+    assert publish_version(root, model) == 3

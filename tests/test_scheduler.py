@@ -191,8 +191,10 @@ def test_registry_scheduler_cached_and_summarized(model):
     reg.register("m", model)
     clock = FakeClock()
     s1 = reg.scheduler("m", max_wait_ms=2.0, slo_ms=50.0, clock=clock)
-    s2 = reg.scheduler("m", max_wait_ms=999.0)   # kwargs ignored: cached
+    s2 = reg.scheduler("m")                      # bare lookup: cache hit
     assert s1 is s2
+    with pytest.raises(ValueError):              # conflicting override
+        reg.scheduler("m", max_wait_ms=999.0)    # must not be swallowed
     with pytest.raises(KeyError):
         reg.latency_summary("other")
     f = s1.submit(_requests([5])[0])
