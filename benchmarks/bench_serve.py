@@ -1,8 +1,13 @@
 """Serving benchmark -> BENCH_serve.json: sync, async, and sharded modes.
 
-Fits a model on synthetic blob+ring data, then measures:
+Fits a model on synthetic blob+ring data through `repro.api.KernelKMeans`
+(--backend picks the approximation backend), then measures:
 
   --mode sync     bucketed assignments/sec per batch size (MicroBatcher)
+  --mode backends accuracy + fit memory + serving throughput for every
+                  registered approximation backend (onepass-srht,
+                  onepass-gaussian, nystrom, exact) fitted through the
+                  unified KernelKMeans front door on the same data
   --mode async    request latency p50/p95/p99 + SLO accounting through
                   the deadline-driven AsyncBatcher
   --mode fused    fused gram->projection Pallas stripe vs the two-pass
@@ -38,10 +43,18 @@ def main():
     ap.add_argument("--k", type=int, default=2)
     ap.add_argument("--l", type=int, default=10)
     ap.add_argument("--block", type=int, default=512)
+    ap.add_argument("--backend", default="onepass-srht",
+                    choices=["onepass-srht", "onepass-gaussian", "nystrom",
+                             "exact"],
+                    help="approximation backend the served model is "
+                         "fitted with")
+    ap.add_argument("--nystrom-m", type=int, default=None,
+                    help="landmark count for --backend nystrom")
     ap.add_argument("--batch-sizes", default="64,512")
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--mode", default="all",
-                    choices=["sync", "async", "fused", "swap", "all"])
+                    choices=["sync", "async", "fused", "swap", "backends",
+                             "all"])
     ap.add_argument("--fused-embed", default="auto",
                     choices=["auto", "on", "off"],
                     help="extension stripe engine for sync/async modes: "
@@ -59,14 +72,21 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    from repro.api import KernelKMeans
     from repro.data import blob_ring
-    from repro.serve import fit_model, write_bench
+    from repro.serve import write_bench
     from repro.serve.bench import format_bench, run_benches
 
     key = jax.random.PRNGKey(args.seed)
-    X, _ = blob_ring(key, n=args.n)
-    model = fit_model(jax.random.PRNGKey(args.seed + 1), X, k=args.k,
-                      r=args.r, oversampling=args.l, block=args.block)
+    X, labels = blob_ring(key, n=args.n)
+    backend_params = ({"oversampling": args.l}
+                      if args.backend.startswith("onepass-") else
+                      {"m": args.nystrom_m}
+                      if args.backend == "nystrom"
+                      and args.nystrom_m is not None else {})
+    est = KernelKMeans(k=args.k, r=args.r, backend=args.backend,
+                       backend_params=backend_params, block=args.block)
+    model = est.fit(X, key=jax.random.PRNGKey(args.seed + 1)).model_
     mesh = None
     if args.sharded:
         n_dev = len(jax.devices())
@@ -74,8 +94,8 @@ def main():
             ap.error(f"--sharded needs >= 2 devices, have {n_dev}")
         mesh = jax.make_mesh((n_dev,), ("data",))
 
-    modes = (("sync", "async", "fused", "swap") if args.mode == "all"
-             else (args.mode,))
+    modes = (("sync", "async", "fused", "swap", "backends")
+             if args.mode == "all" else (args.mode,))
     embed_fused = {"auto": None, "on": True, "off": False}[args.fused_embed]
     bench = run_benches(
         model, modes=modes,
@@ -84,7 +104,8 @@ def main():
         embed_fused=embed_fused,
         interpret=True if args.interpret else None,
         mesh=mesh, n_requests=args.async_requests,
-        max_wait_ms=args.max_wait_ms, slo_ms=args.slo_ms)
+        max_wait_ms=args.max_wait_ms, slo_ms=args.slo_ms,
+        data=(X, labels))
     write_bench(args.out, bench)
     print(format_bench(bench))
     print(f"wrote {args.out}")

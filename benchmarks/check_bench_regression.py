@@ -13,10 +13,14 @@ Gated metrics:
           latency p95 ms                       (higher = regression)
   fused   fused + two_pass queries_per_sec     (lower = regression)
   swap    p95 before/after the hot-swap        (higher = regression)
+  backends  per-backend clustering accuracy    (lower = regression;
+            dimensionless — never speed-normalized)
+            and assignments_per_sec            (lower = regression)
 
-Informational (reported, never gated): async queue-wait p95 and the
+Informational (reported, never gated): async queue-wait p95, the
 swap flip duration — at ~1 ms / ~1 us scale they are OS-scheduler
-jitter, not serving performance.
+jitter, not serving performance — and per-backend fit wall time
+(dominated by eigh/K-means restarts, too machine-noisy to gate).
 
 The committed baseline and the CI runner are different (and
 burstable-CPU) machines, so raw wall-clock numbers drift with hardware
@@ -59,8 +63,13 @@ def _dig(d: Dict, *path):
 # Reported in the table but never fail the gate (see module docstring).
 # swap/flip_ms is microsecond-scale (two dict stores under a lock), so a
 # relative tolerance on it would gate OS-scheduler jitter, not code; the
-# swap p95s are gated like the async p95 they come from.
+# swap p95s are gated like the async p95 they come from. Backend fit wall
+# time includes K-means restarts and eigh — too machine-noisy to gate,
+# unlike the same section's accuracy/throughput.
 INFO_METRICS = {"async/queue_wait_p95_ms", "swap/flip_ms"}
+INFO_PREFIXES = ("backends/fit_s/",)
+# Dimensionless metrics: machine speed is irrelevant, never rescale.
+NO_NORMALIZE_PREFIXES = ("backends/accuracy/",)
 
 
 def collect_metrics(bench: Dict) -> Dict[str, Tuple[float, bool]]:
@@ -86,6 +95,18 @@ def collect_metrics(bench: Dict) -> Dict[str, Tuple[float, bool]]:
         v = _dig(bench, "swap", metric)
         if v is not None:
             out[f"swap/{metric}"] = (float(v), False)
+    # Backend sweep: accuracy and serving throughput are gated per
+    # backend (accuracy is dimensionless — diff() skips the machine-speed
+    # normalization for it, see NO_NORMALIZE_PREFIXES).
+    for name, row in (_dig(bench, "backends", "per_backend") or {}).items():
+        if "accuracy" in row:
+            out[f"backends/accuracy/{name}"] = (float(row["accuracy"]),
+                                                True)
+        if "assignments_per_sec" in row:
+            out[f"backends/assignments_per_sec/{name}"] = (
+                float(row["assignments_per_sec"]), True)
+        if "fit_s" in row:
+            out[f"backends/fit_s/{name}"] = (float(row["fit_s"]), False)
     return out
 
 
@@ -110,7 +131,7 @@ def diff(baseline: Dict, fresh: Dict, tolerance: float
     for name in sorted(set(base_m) | set(fresh_m)):
         b = base_m.get(name)
         f = fresh_m.get(name)
-        if f is not None:
+        if f is not None and not name.startswith(NO_NORMALIZE_PREFIXES):
             # Normalize out machine speed: throughput (higher-better)
             # scales up on a slower machine, latency scales down.
             val, hib = f
@@ -119,7 +140,8 @@ def diff(baseline: Dict, fresh: Dict, tolerance: float
             rows.append({"metric": name, "baseline": None,
                          "fresh": f[0], "delta": None, "status": "new"})
             continue
-        info = name in INFO_METRICS
+        info = (name in INFO_METRICS
+                or name.startswith(INFO_PREFIXES))
         if f is None:
             rows.append({"metric": name, "baseline": b[0], "fresh": None,
                          "delta": None,

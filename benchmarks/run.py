@@ -10,9 +10,18 @@ the derived column carries the paper-comparable metric.
   theorem1  Thm. 1 bound tightness over random PSD matrices
   memory    memory footprint: ours O(r'n) vs Nystrom O(mn) at matched error
   kernels   Pallas kernel microbench (interpret mode) vs jnp oracle
+  backends  the estimator-API sweep: every --backends entry fitted through
+            repro.api.KernelKMeans on the same data (accuracy, approx
+            error, fit memory model)
+
+Select sections with --sections (comma list; default: all); --backends
+restricts the estimator sweep's backend list. The paper-table sections
+run through the unified estimator API (`repro.api.KernelKMeans`) — the
+historical free functions are deprecation shims over the same code paths.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -35,10 +44,21 @@ def _row(name, us, derived):
     print(f"{name},{us:.0f},{derived}", flush=True)
 
 
+_POLY = {"gamma": 0.0, "degree": 2}
+
+
+def _onepass_est(k, r, oversampling, block=512):
+    from repro.api import KernelKMeans
+    return KernelKMeans(k=k, r=r, kernel="polynomial", kernel_params=_POLY,
+                        backend="onepass-srht",
+                        backend_params={"oversampling": oversampling},
+                        block=block)
+
+
 def table1():
     from repro.core import (polynomial_kernel, gram_matrix, kmeans,
-                            exact_eig_from_gram, one_pass_kernel_kmeans,
-                            nystrom, linearized_kmeans_from_Y,
+                            exact_eig_from_gram, nystrom,
+                            linearized_kmeans_from_Y,
                             clustering_accuracy, kernel_approx_error)
     from repro.data import blob_ring, two_rings
 
@@ -56,11 +76,10 @@ def table1():
         errs, accs, t = [], [], 0.0
         for s in range(5):
             t0 = time.perf_counter()
-            res = one_pass_kernel_kmeans(jax.random.PRNGKey(10 + s), kern,
-                                         X, k=2, r=2, oversampling=10)
+            res = _onepass_est(2, 2, 10).fit(X, key=jax.random.PRNGKey(10 + s))
             t += (time.perf_counter() - t0) * 1e6
-            errs.append(kernel_approx_error(K, res.Y))
-            accs.append(clustering_accuracy(labels, res.labels, 2))
+            errs.append(kernel_approx_error(K, res.embedding_))
+            accs.append(clustering_accuracy(labels, res.labels_, 2))
         _row(f"table1.{geom}.ours", t / 5,
              f"err={np.mean(errs):.2f};acc={np.mean(accs):.2f}")
         for m in (20, 100):
@@ -82,8 +101,7 @@ def table1():
 
 
 def fig3():
-    from repro.core import (polynomial_kernel, gram_matrix,
-                            one_pass_kernel_kmeans, nystrom,
+    from repro.core import (polynomial_kernel, gram_matrix, nystrom,
                             linearized_kmeans_from_Y, clustering_accuracy,
                             kernel_approx_error)
     from repro.data import segmentation_proxy
@@ -94,10 +112,9 @@ def fig3():
     errs, accs = [], []
     t0 = time.perf_counter()
     for s in range(5):
-        res = one_pass_kernel_kmeans(jax.random.PRNGKey(20 + s), kern, X,
-                                     k=7, r=2, oversampling=5)
-        errs.append(kernel_approx_error(K, res.Y))
-        accs.append(clustering_accuracy(labels, res.labels, 7))
+        res = _onepass_est(7, 2, 5).fit(X, key=jax.random.PRNGKey(20 + s))
+        errs.append(kernel_approx_error(K, res.embedding_))
+        accs.append(clustering_accuracy(labels, res.labels_, 7))
     _row("fig3.ours_rp7", (time.perf_counter() - t0) / 5 * 1e6,
          f"err={np.mean(errs):.3f};acc={np.mean(accs):.3f}")
     for m in (10, 20, 50):
@@ -188,13 +205,57 @@ def kernels():
          f"label_agreement={float(jnp.mean(l1 == l2)):.4f}")
 
 
+def backends(names=None):
+    """Estimator-API sweep: every backend on the same data + kernel.
+
+    The unified-front-door version of Table 1's comparison: accuracy,
+    approximation error, and the fit memory model per registered backend,
+    all through repro.api.KernelKMeans.
+    """
+    from repro.api import KernelKMeans, available_backends, fit_memory_bytes
+    from repro.core import clustering_accuracy, kernel_approx_error_streaming
+    from repro.data import blob_ring
+
+    X, labels = blob_ring(jax.random.PRNGKey(0), 4000)
+    n = X.shape[1]
+    for name in (names or available_backends()):
+        est = KernelKMeans(k=2, r=2, kernel="polynomial",
+                           kernel_params=_POLY, backend=name)
+        t0 = time.perf_counter()
+        est.fit(X, key=jax.random.PRNGKey(7))
+        us = (time.perf_counter() - t0) * 1e6
+        err = kernel_approx_error_streaming(est.model_.kernel_fn(), X,
+                                            est.embedding_)
+        acc = clustering_accuracy(labels, est.labels_, 2)
+        mem = fit_memory_bytes(name, n, 2, **est.backend_params)
+        _row(f"backends.{name}", us,
+             f"err={err:.2f};acc={acc:.2f};fit_bytes={mem};"
+             f"n_ref={est.model_.n_ref}")
+
+
+_SECTIONS = {"table1": table1, "fig3": fig3, "theorem1": theorem1,
+             "memory": memory, "kernels": kernels, "backends": backends}
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sections", default=",".join(_SECTIONS),
+                    help=f"comma list of {sorted(_SECTIONS)}")
+    ap.add_argument("--backends", default=None,
+                    help="comma list restricting the estimator sweep "
+                         "(default: every registered backend)")
+    args = ap.parse_args()
+    sections = [s.strip() for s in args.sections.split(",") if s.strip()]
+    unknown = set(sections) - set(_SECTIONS)
+    if unknown:
+        ap.error(f"unknown section(s) {sorted(unknown)}; "
+                 f"have {sorted(_SECTIONS)}")
     print("name,us_per_call,derived")
-    table1()
-    fig3()
-    theorem1()
-    memory()
-    kernels()
+    for name in sections:
+        if name == "backends" and args.backends:
+            backends([b.strip() for b in args.backends.split(",")])
+        else:
+            _SECTIONS[name]()
 
 
 if __name__ == "__main__":

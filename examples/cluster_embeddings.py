@@ -11,9 +11,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import KernelKMeans
 from repro.configs import get_config
 from repro.models.registry import get_api
-from repro.core import rbf_kernel, one_pass_kernel_kmeans, clustering_accuracy
+from repro.core import clustering_accuracy
 
 cfg = get_config("qwen3-14b", smoke=True)
 api = get_api(cfg)
@@ -34,8 +35,9 @@ logits = api.forward(params, cfg, {"tokens": tokens}, 1)   # (B, S, V)
 emb = jnp.mean(logits, axis=1)                             # (B, V)
 emb = emb / (jnp.linalg.norm(emb, axis=1, keepdims=True) + 1e-6)
 
-res = one_pass_kernel_kmeans(jax.random.PRNGKey(2), rbf_kernel(gamma=1.0),
-                             emb.T, k=2, r=4, oversampling=10, block=64)
-acc = clustering_accuracy(labels, res.labels, 2)
+est = KernelKMeans(k=2, r=4, kernel="rbf", kernel_params={"gamma": 1.0},
+                   backend_params={"oversampling": 10}, block=64)
+est.fit(emb.T, key=jax.random.PRNGKey(2))
+acc = clustering_accuracy(labels, est.labels_, 2)
 print(f"clustered {2 * n_per} activation vectors: accuracy {acc:.3f}")
 assert acc > 0.9

@@ -1,27 +1,46 @@
-"""Quickstart: the paper's Table-1 experiment in ~20 lines.
+"""Quickstart: the paper's Table-1 experiment through the estimator API.
+
+One front door (`repro.api.KernelKMeans`) over pluggable approximation
+backends — the paper's one-pass method is the default; Nystrom and the
+exact eigendecomposition are one keyword away, which is the whole
+comparison the paper is about.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
-from repro.core import (polynomial_kernel, one_pass_kernel_kmeans, kmeans,
-                        clustering_accuracy, kernel_approx_error_streaming)
+from repro.api import KernelKMeans
+from repro.core import (clustering_accuracy, kernel_approx_error_streaming,
+                        kmeans)
 from repro.data import blob_ring
 
 # Fig. 1 data: a Gaussian blob enclosed by a ring — K-means cannot separate
 # them, the degree-2 polynomial kernel can.
 X, labels = blob_ring(jax.random.PRNGKey(0), n=4000)
-kernel = polynomial_kernel(gamma=0.0, degree=2)
 
-# Alg. 1: one streaming pass over kernel stripes (K never materialized),
-# SRHT-preconditioned sketch, rank-2 linearization, standard K-means.
-result = one_pass_kernel_kmeans(jax.random.PRNGKey(1), kernel, X,
-                                k=2, r=2, oversampling=10)
+# Alg. 1 via the front door: one streaming pass over kernel stripes (K
+# never materialized), SRHT-preconditioned sketch, rank-2 linearization,
+# standard K-means. backend="nystrom" / "exact" swaps the approximation;
+# everything downstream (predict, save, the whole serving stack) is
+# backend-agnostic.
+est = KernelKMeans(k=2, r=2, kernel="polynomial",
+                   kernel_params={"gamma": 0.0, "degree": 2},
+                   backend="onepass-srht",
+                   backend_params={"oversampling": 10})
+est.fit(X, key=jax.random.PRNGKey(1))
 
-acc = clustering_accuracy(labels, result.labels, 2)
-err = kernel_approx_error_streaming(kernel, X, result.Y)
+acc = clustering_accuracy(labels, est.labels_, 2)
+err = kernel_approx_error_streaming(est.model_.kernel_fn(), X,
+                                    est.embedding_)
 plain = clustering_accuracy(
     labels, kmeans(jax.random.PRNGKey(2), X.T, 2).labels, 2)
 print(f"one-pass kernel K-means: accuracy {acc:.3f}, approx error {err:.3f}")
 print(f"plain K-means baseline:  accuracy {plain:.3f}")
 assert acc > 0.95 and plain < 0.9
+
+# The same fit is immediately servable: out-of-sample points assign
+# through the Nystrom-style extension (see docs/SERVING.md for the
+# production path: artifact -> registry -> batched/async serving).
+X_new = jax.random.normal(jax.random.PRNGKey(3), (2, 64))
+print(f"assigned {est.predict(X_new).size} new points; "
+      f"score {est.score(X_new):.2f}")

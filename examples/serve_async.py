@@ -14,19 +14,23 @@ Run: PYTHONPATH=src python examples/serve_async.py
 import jax
 import numpy as np
 
+from repro.api import KernelKMeans
 from repro.data import blob_ring
-from repro.serve import DEFAULT_REGISTRY, fit_model, save_model
+from repro.serve import DEFAULT_REGISTRY
 
 # --- 1. fit: one streaming pass over kernel stripes, then K-means -------
+# (backend="nystrom" or "exact" here would change NOTHING below: the
+# whole serving path is backend-agnostic.)
 X, _ = blob_ring(jax.random.PRNGKey(0), n=2000)
-model = fit_model(jax.random.PRNGKey(1), X, k=2, r=2,
-                  kernel="polynomial",
-                  kernel_params={"gamma": 0.0, "degree": 2}, block=512)
+est = KernelKMeans(k=2, r=2, kernel="polynomial",
+                   kernel_params={"gamma": 0.0, "degree": 2}, block=512)
+est.fit(X, key=jax.random.PRNGKey(1))
 
 # --- 2. persist + load: what a deployment actually ships ----------------
-path = save_model(model, "serve_artifacts/async_demo")
+path = est.save("serve_artifacts/async_demo")
 served = DEFAULT_REGISTRY.load("demo", path, overwrite=True)
-print(f"artifact: {path} (n={served.spec.n}, r={served.spec.r})")
+print(f"artifact: {path} (n={served.spec.n}, r={served.spec.r}, "
+      f"backend={served.spec.backend})")
 
 # --- 3. async serving: futures per request, deadline-driven flush -------
 # max_wait_ms is the coalescing deadline (p99 knob); slo_ms the objective

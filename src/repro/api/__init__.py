@@ -1,0 +1,46 @@
+"""repro.api: the estimator front door — one `KernelKMeans`, many backends.
+
+The paper's central claim is a *comparison*: the one-pass randomized
+approximation matches Nystrom and the exact eigendecomposition in
+clustering accuracy at a fraction of the memory. This package makes that
+comparison a first-class, servable axis instead of three incompatible
+free functions:
+
+  backends.py   `Approximator` protocol + registry. Four registered
+                backends, each returning the same `Embedding`
+                (Y, U, eigvals, extension reference points, state):
+                  onepass-srht      Alg. 1, SRHT sketch (the paper)
+                  onepass-gaussian  Alg. 1, dense Gaussian sketch
+                  nystrom           classical m-landmark Nystrom
+                                    [Williams & Seeger 2001]
+                  exact             rank-r eigendecomposition (ceiling)
+  estimator.py  `KernelKMeans`: sklearn-shaped fit / embed / predict /
+                score driven by a single frozen `ClusteringSpec`; `fit`
+                packages a `FittedModel`, so ANY backend's fit flows
+                through the whole serving stack (repro.serve: artifact,
+                extension, batching, registry, versioning, hot-swap)
+                unchanged.
+
+Quick use:
+
+    from repro.api import KernelKMeans
+    est = KernelKMeans(k=2, r=2, backend="nystrom",
+                       backend_params={"m": 128}).fit(X, key=0)
+    labels = est.predict(X_new)
+    est.save("artifacts/demo")          # -> servable artifact dir
+
+Legacy entry points (`repro.serve.fit_model`,
+`repro.core.one_pass_kernel_kmeans`) are deprecation shims over this API.
+"""
+from repro.api.backends import (Approximator, Embedding,
+                                available_backends, fit_memory_bytes,
+                                get_backend, register_backend)
+from repro.api.estimator import KernelKMeans
+from repro.serve.artifact import ClusteringSpec
+
+__all__ = [
+    "Approximator", "Embedding", "available_backends", "fit_memory_bytes",
+    "get_backend", "register_backend",
+    "KernelKMeans",
+    "ClusteringSpec",
+]

@@ -1,0 +1,184 @@
+"""Pluggable kernel-approximation backends behind one protocol.
+
+Every backend linearizes the kernel matrix K = kappa(X, X) at rank r and
+returns the SAME `Embedding` contract, so the estimator (`KernelKMeans`)
+and the serving stack (repro.serve) are backend-agnostic:
+
+    Y        (r, n)      linearized training samples: K_hat ~= Y^T Y —
+                         standard K-means on the columns of Y is kernel
+                         K-means under the approximation
+    U        (n_ref, r)  orthonormal eigenvector basis of the extension
+                         operator; rows index the training points
+                         (one-pass / exact) or the Nystrom landmarks
+    eigvals  (r,)        matching eigenvalues (descending, >= 0)
+    ref      (p, m)|None extension reference points when they are NOT the
+                         training set (Nystrom landmarks); None means
+                         "extend against X_train"
+    state    dict        backend-specific reproducibility state, persisted
+                         verbatim into the FittedModel artifact (SRHT
+                         signs/rows, Gaussian Omega, landmark indices)
+
+The out-of-sample extension is the same formula for every backend:
+
+    y(x) = eigvals^{-1/2} U^T kappa(ref, x)        (serve/extend.py)
+
+— for one-pass/exact that is the usual Nystrom-style extension against
+the training set; for the Nystrom backend U/eigvals are the eigenpairs of
+the landmark gram W_m, so the identical formula against the m landmarks
+reproduces the fitted Y exactly on training points AND serves at
+O(m x block) kernel memory per stripe instead of O(n x block).
+
+Memory model (`fit_memory_bytes`): the paper's comparison axis. One-pass
+holds the (n, r') sketch, Nystrom the (n, m) landmark block C, exact the
+full (n, n) gram.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.exact import exact_eig
+from repro.core.kernels_fn import KernelFn
+from repro.core.nystrom import nystrom
+from repro.core.sketch import randomized_eig_with_state
+
+
+class Embedding(NamedTuple):
+    """What every backend's fit returns; see module docstring."""
+    Y: jnp.ndarray
+    U: jnp.ndarray
+    eigvals: jnp.ndarray
+    ref: Optional[jnp.ndarray] = None
+    state: Optional[Dict[str, jnp.ndarray]] = None
+
+    @property
+    def arrays(self) -> Dict[str, jnp.ndarray]:
+        """The state dict, never-None view."""
+        return self.state or {}
+
+
+class Approximator(Protocol):
+    """Protocol every registered backend satisfies."""
+    name: str
+
+    def fit(self, key: jax.Array, kernel: KernelFn, X: jnp.ndarray,
+            r: int, *, block: int = 512, **params) -> Embedding:
+        """Linearize kappa(X, X) at rank r; X is (p, n)."""
+        ...
+
+    def fit_memory_bytes(self, n: int, r: int, **params) -> int:
+        """Dominant fit-time working-set bytes (float32)."""
+        ...
+
+
+class _Backend:
+    """Registry entry: a named (fit, fit_memory_bytes) pair."""
+
+    def __init__(self, name: str, fit: Callable, memory: Callable):
+        self.name = name
+        self._fit = fit
+        self._memory = memory
+
+    def fit(self, key, kernel, X, r, *, block=512, **params) -> Embedding:
+        return self._fit(key, kernel, X, r, block=block, **params)
+
+    def fit_memory_bytes(self, n: int, r: int, **params) -> int:
+        return int(self._memory(n, r, **params))
+
+    def __repr__(self) -> str:
+        return f"<Approximator {self.name!r}>"
+
+
+_BACKENDS: Dict[str, _Backend] = {}
+
+
+def register_backend(name: str, memory: Callable):
+    """Decorator: register `fit` under `name` with its memory model."""
+
+    def wrap(fit: Callable) -> Callable:
+        _BACKENDS[name] = _Backend(name, fit, memory)
+        return fit
+
+    return wrap
+
+
+def get_backend(name: str) -> _Backend:
+    if name not in _BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; "
+                         f"have {available_backends()}")
+    return _BACKENDS[name]
+
+
+def available_backends() -> list:
+    return sorted(_BACKENDS)
+
+
+def fit_memory_bytes(name: str, n: int, r: int, **params) -> int:
+    """Dominant fit-time working set of `name` at (n, r) — the number the
+    paper's Table 1 / Fig. 3 memory comparison is about."""
+    return get_backend(name).fit_memory_bytes(n, r, **params)
+
+
+def default_nystrom_m(n: int, r: int) -> int:
+    """Default landmark count: the paper's point is that matching the
+    one-pass accuracy needs m >> r' — 16r (floored at 64) tracks the
+    m/r ratios of Table 1 / Fig. 3 without scaling past n."""
+    return min(n, max(16 * r, 64))
+
+
+# ---------------------------------------------------------------------------
+# The four registered backends
+# ---------------------------------------------------------------------------
+
+def _onepass(sketch_type: str):
+    def fit(key, kernel, X, r, *, block=512, oversampling=10,
+            fwht_fn=None, truncate_basis=False) -> Embedding:
+        out = randomized_eig_with_state(key, kernel, X, r, oversampling,
+                                        block, sketch_type, fwht_fn,
+                                        truncate_basis)
+        sk = out.sketch
+        state = ({"sketch_signs": sk.signs, "sketch_rows": sk.rows}
+                 if sketch_type == "srht" else {"sketch_omega": sk.omega})
+        return Embedding(Y=out.eig.Y, U=out.eig.U, eigvals=out.eig.eigvals,
+                         ref=None, state=state)
+    return fit
+
+
+register_backend(
+    "onepass-srht",
+    memory=lambda n, r, oversampling=10, **_: 4 * n * (r + oversampling),
+)(_onepass("srht"))
+
+register_backend(
+    "onepass-gaussian",
+    # Sketch W plus the equally-sized dense Omega it is multiplied by.
+    memory=lambda n, r, oversampling=10, **_: 8 * n * (r + oversampling),
+)(_onepass("gaussian"))
+
+
+@register_backend(
+    "nystrom",
+    memory=lambda n, r, m=None, **_: 4 * n * (m or default_nystrom_m(n, r)),
+)
+def _fit_nystrom(key, kernel, X, r, *, block=512, m=None,
+                 eps=1e-8) -> Embedding:
+    n = X.shape[1]
+    m = m if m is not None else default_nystrom_m(n, r)
+    res = nystrom(key, kernel, X, m=m, r=r, eps=eps)
+    return Embedding(Y=res.Y, U=res.U, eigvals=res.eigvals,
+                     ref=X[:, res.idx], state={"landmark_idx": res.idx})
+
+
+@register_backend(
+    "exact",
+    memory=lambda n, r, **_: 4 * n * n,
+)
+def _fit_exact(key, kernel, X, r, *, block=512) -> Embedding:
+    # Deterministic (key unused); materializes the full gram — the
+    # accuracy ceiling, validation-scale n only.
+    del key, block
+    eig = exact_eig(kernel, X, r)
+    return Embedding(Y=eig.Y, U=eig.U, eigvals=eig.eigvals, ref=None,
+                     state={})

@@ -1,0 +1,269 @@
+"""KernelKMeans: the sklearn-shaped estimator over pluggable backends.
+
+One front door for the paper's whole comparison surface:
+
+    est = KernelKMeans(k=2, r=2, kernel="polynomial",
+                       kernel_params={"gamma": 0.0, "degree": 2},
+                       backend="onepass-srht").fit(X, key=0)
+    est.labels_                   # training clustering
+    est.predict(X_new)            # out-of-sample assignment
+    est.embed(X_new)              # (r, b) linearized new points
+    est.score(X_new)              # -sum of squared centroid distances
+    est.save("artifacts/demo")    # servable FittedModel artifact
+
+`fit` is spec-driven: every constructor argument lands in one frozen
+`ClusteringSpec` (serve/artifact.py), the chosen backend
+(repro.api.backends) produces the rank-r `Embedding`, standard K-means
+clusters its columns, and the result is packaged as a `FittedModel` — so
+a fit from ANY backend flows through the entire serving stack
+(MicroBatcher / AsyncBatcher / ModelRegistry / VersionStore / hot-swap)
+unchanged.
+
+RNG contract: `fit(X, key)` splits the key once into (backend, kmeans)
+sub-keys — exactly the split the historical `fit_model` /
+`one_pass_kernel_kmeans` used, so the deprecation shims over this class
+reproduce their old outputs bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import backends as be
+from repro.core.kernels_fn import kernel_params_for
+from repro.core.kmeans import kmeans
+from repro.serve import extend
+from repro.serve.artifact import (ClusteringSpec, FittedModel,
+                                  _cached_kernel, load_model, save_model)
+
+# fit_model's historical default for the paper's primary kernel.
+_KERNEL_DEFAULTS = {"polynomial": {"gamma": 0.0, "degree": 2}}
+
+
+def _as_key(key: Union[None, int, jax.Array]) -> jax.Array:
+    if key is None:
+        return jax.random.PRNGKey(0)
+    if isinstance(key, (int, np.integer)):
+        return jax.random.PRNGKey(int(key))
+    return key
+
+
+def _spec_safe(params: Dict) -> Dict:
+    """The JSON-serializable subset of backend_params — runtime-only
+    knobs (e.g. a fwht_fn callable for the TPU FWHT) are used by the fit
+    but cannot land in the persisted spec. Numpy scalars (a caller
+    passing m=np.int64(128) is routine) are real config, not runtime
+    state — coerce them rather than dropping them."""
+    out = {}
+    for name, val in params.items():
+        if isinstance(val, np.integer):
+            val = int(val)
+        elif isinstance(val, np.floating):
+            val = float(val)
+        elif isinstance(val, np.bool_):
+            val = bool(val)
+        try:
+            json.dumps(val)
+        except TypeError:
+            continue
+        out[name] = val
+    return out
+
+
+class KernelKMeans:
+    """Kernel K-means at rank r through a pluggable approximation backend.
+
+    Parameters mirror `ClusteringSpec` (the frozen config this estimator
+    is driven by): `kernel` is a registry NAME (core/kernels_fn) so the
+    fit is serializable; `backend` one of
+    `repro.api.available_backends()`; `backend_params` its knobs
+    (`oversampling` for one-pass, `m` for Nystrom — non-serializable
+    values like `fwht_fn` are honoured at fit time but excluded from the
+    persisted spec).
+
+    Fitted attributes (sklearn convention, trailing underscore):
+        labels_     (n,)   training cluster labels
+        embedding_  (r, n) linearized training samples Y
+        eigvals_    (r,)   eigenvalues of the approximation
+        centroids_  (k, r) K-means centroids
+        inertia_    float  K-means objective (sum of squared distances)
+        spec_              the bound ClusteringSpec (n, p filled in)
+        model_             the packaged FittedModel (servable artifact)
+    """
+
+    def __init__(self, k: int = 2, r: int = 2, *,
+                 kernel: str = "polynomial",
+                 kernel_params: Optional[Dict] = None,
+                 backend: str = "onepass-srht",
+                 backend_params: Optional[Dict] = None,
+                 block: int = 512, n_restarts: int = 10,
+                 max_iter: int = 20):
+        be.get_backend(backend)                      # fail fast
+        valid = kernel_params_for(kernel)            # fail fast
+        if kernel_params is None:
+            kernel_params = dict(_KERNEL_DEFAULTS.get(kernel, {}))
+        unknown = set(kernel_params) - valid
+        if unknown:
+            raise ValueError(
+                f"unknown param(s) {sorted(unknown)} for kernel "
+                f"{kernel!r}; valid params: {sorted(valid) or 'none'}")
+        self.k = int(k)
+        self.r = int(r)
+        self.kernel = kernel
+        self.kernel_params = dict(kernel_params)
+        self.backend = backend
+        self.backend_params = dict(backend_params or {})
+        self.block = int(block)
+        self.n_restarts = int(n_restarts)
+        self.max_iter = int(max_iter)
+        self.model_: Optional[FittedModel] = None
+        # Training-side attributes; stay None on the from_model()/load()
+        # path (they are not part of the artifact).
+        self.labels_ = None
+        self.embedding_ = None
+        self.eigvals_ = None
+        self.centroids_ = None
+        self.inertia_: Optional[float] = None
+        self.spec_ = None
+        self._extender: Optional[extend.Extender] = None
+
+    # -- fitting ---------------------------------------------------------
+
+    def fit(self, X: jnp.ndarray,
+            key: Union[None, int, jax.Array] = None) -> "KernelKMeans":
+        """Fit on X (p, n); `key` may be a PRNGKey, an int seed, or None
+        (seed 0). Returns self."""
+        key = _as_key(key)
+        spec = ClusteringSpec(
+            kernel=self.kernel, kernel_params=dict(self.kernel_params),
+            k=self.k, r=self.r, backend=self.backend,
+            backend_params=_spec_safe(self.backend_params),
+            block=self.block, n_restarts=self.n_restarts,
+            max_iter=self.max_iter, n=int(X.shape[1]), p=int(X.shape[0]))
+        kern = _cached_kernel(spec.kernel,
+                              tuple(sorted(spec.kernel_params.items())))
+        k_backend, k_km = jax.random.split(key)
+        emb = be.get_backend(self.backend).fit(
+            k_backend, kern, X, self.r, block=self.block,
+            **self.backend_params)
+        km = kmeans(k_km, emb.Y.T, self.k, n_restarts=self.n_restarts,
+                    max_iter=self.max_iter)
+        state = emb.arrays
+        self.model_ = FittedModel(
+            spec=spec, X_train=jnp.asarray(X, jnp.float32),
+            U=emb.U, eigvals=emb.eigvals, centroids=km.centroids,
+            sketch_signs=state.get("sketch_signs"),
+            sketch_rows=state.get("sketch_rows"),
+            sketch_omega=state.get("sketch_omega"),
+            landmarks=emb.ref,
+            landmark_idx=state.get("landmark_idx"))
+        self.labels_ = km.labels
+        self.embedding_ = emb.Y
+        self.eigvals_ = emb.eigvals
+        self.centroids_ = km.centroids
+        self.inertia_ = float(km.objective)
+        self.spec_ = spec
+        self._extender = None
+        return self
+
+    def fit_predict(self, X: jnp.ndarray,
+                    key: Union[None, int, jax.Array] = None) -> np.ndarray:
+        return np.asarray(self.fit(X, key=key).labels_)
+
+    # -- inference -------------------------------------------------------
+
+    def _require_fit(self) -> FittedModel:
+        if self.model_ is None:
+            raise RuntimeError("KernelKMeans is not fitted; call fit() "
+                               "or load()")
+        return self.model_
+
+    def extender(self, **kwargs) -> extend.Extender:
+        """The serving extension engine over the fitted model (cached for
+        the no-kwargs call so repeated predict()s reuse executables)."""
+        model = self._require_fit()
+        if kwargs:
+            return extend.Extender(model, **kwargs)
+        if self._extender is None:
+            self._extender = extend.Extender(model)
+        return self._extender
+
+    def embed(self, X: jnp.ndarray) -> jnp.ndarray:
+        """Out-of-sample extension of X (p, b) -> (r, b)."""
+        return self.extender().embed(jnp.asarray(X, jnp.float32))
+
+    def predict(self, X: jnp.ndarray) -> np.ndarray:
+        """Assign X (p, b) to the fitted clusters -> labels (b,)."""
+        labels, _ = self.extender().assign(jnp.asarray(X, jnp.float32))
+        return np.asarray(labels)
+
+    def transform(self, X: jnp.ndarray) -> jnp.ndarray:
+        """sklearn-style alias of `embed` (column-major: (r, b))."""
+        return self.embed(X)
+
+    def score(self, X: Optional[jnp.ndarray] = None) -> float:
+        """Negative sum of squared distances to the assigned centroids
+        (higher is better, sklearn convention). X=None scores the
+        training fit (the negative K-means inertia)."""
+        if X is None:
+            self._require_fit()
+            if self.inertia_ is None:
+                raise RuntimeError(
+                    "training-side attributes (inertia_/labels_) are not "
+                    "part of the artifact; this estimator was loaded, not "
+                    "fitted — pass X to score against data")
+            return -self.inertia_
+        _, d2 = self.extender().assign(jnp.asarray(X, jnp.float32))
+        return -float(jnp.sum(d2))
+
+    # -- persistence -----------------------------------------------------
+
+    def save(self, artifact_dir: str, dtype: str = "f32") -> str:
+        """Persist the fitted model as a servable artifact directory."""
+        return save_model(self._require_fit(), artifact_dir, dtype=dtype)
+
+    @classmethod
+    def from_model(cls, model: FittedModel) -> "KernelKMeans":
+        """Rebuild an estimator around an existing FittedModel (training
+        labels/embedding are not part of the artifact and stay unset)."""
+        spec = model.spec
+        est = cls(k=spec.k, r=spec.r, kernel=spec.kernel,
+                  kernel_params=dict(spec.kernel_params),
+                  backend=spec.backend,
+                  backend_params=dict(spec.backend_params),
+                  block=spec.block, n_restarts=spec.n_restarts,
+                  max_iter=spec.max_iter)
+        est.model_ = model
+        est.eigvals_ = model.eigvals
+        est.centroids_ = model.centroids
+        est.spec_ = spec
+        return est
+
+    @classmethod
+    def load(cls, artifact_dir: str) -> "KernelKMeans":
+        """Load a saved artifact back into a predict/embed-ready
+        estimator."""
+        return cls.from_model(load_model(artifact_dir))
+
+    def __repr__(self) -> str:
+        fitted = "fitted" if self.model_ is not None else "unfitted"
+        args = {"k": self.k, "r": self.r, "kernel": self.kernel,
+                "backend": self.backend}
+        if self.backend_params:
+            args["backend_params"] = self.backend_params
+        body = ", ".join(f"{k}={v!r}" for k, v in args.items())
+        return f"KernelKMeans({body}) <{fitted}>"
+
+
+def spec_to_estimator(spec: ClusteringSpec) -> KernelKMeans:
+    """An unfitted estimator configured exactly as `spec` records — the
+    refit path: `spec_to_estimator(old.spec).fit(X_new, key)`."""
+    d = dataclasses.asdict(spec)
+    d.pop("n", None)
+    d.pop("p", None)
+    return KernelKMeans(**{k: v for k, v in d.items()})

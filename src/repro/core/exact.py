@@ -15,6 +15,7 @@ from repro.core.kernels_fn import KernelFn, gram_matrix
 class ExactEig(NamedTuple):
     Y: jnp.ndarray        # (r, n)
     eigvals: jnp.ndarray  # (r,) top-r eigenvalues, descending
+    U: jnp.ndarray        # (n, r) orthonormal eigenvector basis: K_r = U S U^T
 
 
 def exact_eig_from_gram(K: jnp.ndarray, r: int) -> ExactEig:
@@ -24,7 +25,7 @@ def exact_eig_from_gram(K: jnp.ndarray, r: int) -> ExactEig:
     U = U[:, ::-1]
     top = jnp.maximum(evals[:r], 0.0)
     Y = jnp.sqrt(top)[:, None] * U[:, :r].T
-    return ExactEig(Y=Y, eigvals=top)
+    return ExactEig(Y=Y, eigvals=top, U=U[:, :r])
 
 
 def exact_eig(kernel: KernelFn, X: jnp.ndarray, r: int) -> ExactEig:

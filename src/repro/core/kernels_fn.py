@@ -44,17 +44,40 @@ def linear_kernel() -> KernelFn:
     return lambda X, Y: X.T @ Y
 
 
+# name -> (factory, valid parameter names). The valid set is what
+# make_kernel enforces: a typo like gamm= must raise, not be silently
+# dropped (linear's old **kw swallowed anything) or die as an opaque
+# TypeError inside the factory.
 _REGISTRY = {
-    "polynomial": polynomial_kernel,
-    "rbf": rbf_kernel,
-    "linear": lambda **kw: linear_kernel(),
+    "polynomial": (polynomial_kernel, frozenset({"gamma", "degree"})),
+    "rbf": (rbf_kernel, frozenset({"gamma"})),
+    "linear": (lambda: linear_kernel(), frozenset()),
 }
+
+
+def kernel_names() -> list:
+    """Registered kernel names, sorted."""
+    return sorted(_REGISTRY)
+
+
+def kernel_params_for(name: str) -> frozenset:
+    """Valid parameter names of a registered kernel."""
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown kernel {name!r}; have {kernel_names()}")
+    return _REGISTRY[name][1]
 
 
 def make_kernel(name: str, **params) -> KernelFn:
     if name not in _REGISTRY:
-        raise ValueError(f"unknown kernel {name!r}; have {sorted(_REGISTRY)}")
-    return _REGISTRY[name](**params)
+        raise ValueError(f"unknown kernel {name!r}; have {kernel_names()}")
+    factory, valid = _REGISTRY[name]
+    unknown = set(params) - valid
+    if unknown:
+        accepted = (f"valid params: {sorted(valid)}" if valid
+                    else "it takes no params")
+        raise ValueError(f"unknown param(s) {sorted(unknown)} for kernel "
+                         f"{name!r}; {accepted}")
+    return factory(**params)
 
 
 def gram_matrix(kernel: KernelFn, X: jnp.ndarray) -> jnp.ndarray:

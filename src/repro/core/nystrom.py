@@ -9,7 +9,7 @@ m >> r', hence ~10x the memory (Table 1, Fig. 3).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +20,23 @@ from repro.core.kernels_fn import KernelFn
 class NystromResult(NamedTuple):
     Y: jnp.ndarray        # (r, n): K_hat_r = Y^T Y
     idx: jnp.ndarray      # (m,) sampled column indices
-    eigvals: jnp.ndarray  # (r,) top eigenvalues of K_hat
+    eigvals: jnp.ndarray  # (r,) top eigenvalues (of W_m, classical form)
+    # (m, r) top-r eigenvectors of W_m = K[idx, idx] (classical form only;
+    # None under optimal_truncation). Together with eigvals this is the
+    # W^+ factor the out-of-sample extension needs: a new point embeds as
+    # y(x) = Lambda_r^{-1/2} U_r^T kappa(X[:, idx], x) — the landmark-based
+    # serving path of repro.serve/repro.api (O(m * block) per stripe
+    # instead of O(n * block)).
+    U: Optional[jnp.ndarray] = None
+
+
+# Truncation floor of the classical path: matches the serving
+# projection's epsilon (serve/extend._EIG_EPS), so fit and serve always
+# make the SAME call on which eigen-directions are rank-deficient — in
+# BOTH directions (the fit never inverts a direction serving would zero,
+# and never zeroes one serving would invert; zeroed directions get an
+# exactly-zero eigenvalue below).
+_ABS_EIG_FLOOR = 1e-7
 
 
 def nystrom(key: jax.Array, kernel: KernelFn, X: jnp.ndarray, m: int, r: int,
@@ -43,7 +59,7 @@ def nystrom(key: jax.Array, kernel: KernelFn, X: jnp.ndarray, m: int, r: int,
     evals, U = jnp.linalg.eigh(Wm)
     evals = evals[::-1]
     U = U[:, ::-1]
-    thresh = eps * jnp.maximum(jnp.max(jnp.abs(evals)), 1e-30)
+    thresh = jnp.maximum(eps * jnp.max(jnp.abs(evals)), _ABS_EIG_FLOOR)
     if optimal_truncation:
         inv_sqrt = jnp.where(evals > thresh,
                              1.0 / jnp.sqrt(jnp.maximum(evals, thresh)), 0.0)
@@ -54,4 +70,12 @@ def nystrom(key: jax.Array, kernel: KernelFn, X: jnp.ndarray, m: int, r: int,
     inv_sqrt_r = jnp.where(evals[:r] > thresh,
                            1.0 / jnp.sqrt(jnp.maximum(evals[:r], thresh)), 0.0)
     Y = (inv_sqrt_r[:, None] * U[:, :r].T) @ C.T   # (r, n)
-    return NystromResult(Y=Y, idx=idx, eigvals=evals[:r])
+    # Zero the eigenvalues of directions the truncation refused to invert
+    # (where inv_sqrt_r is 0, i.e. Y's row is 0), so downstream consumers
+    # — the serving projection Sigma^{-1/2} U^T in repro.serve, which
+    # zeroes eigvals below its own absolute epsilon — make the SAME rank
+    # decision as this fit. Without this, a direction between the serving
+    # epsilon and this relative threshold would be zeroed here but
+    # inverted (with huge amplification) at serve time.
+    evals_r = jnp.where(evals[:r] > thresh, evals[:r], 0.0)
+    return NystromResult(Y=Y, idx=idx, eigvals=evals_r, U=U[:, :r])

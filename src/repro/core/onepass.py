@@ -17,12 +17,12 @@ y(x) = Sigma^{-1/2} U^T kappa(X_train, x)) is repro.serve.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import sketch as sk
 from repro.core.kernels_fn import KernelFn
 from repro.core.kmeans import KMeansResult, kmeans
 
@@ -47,16 +47,26 @@ def one_pass_kernel_kmeans(
     sketch_type: str = "srht",
     fwht_fn: Optional[Callable] = None,
 ) -> OnePassResult:
-    """Alg. 1 verbatim: lines 1-6 = randomized_eig, line 7 = standard K-means.
+    """DEPRECATED shim for Alg. 1 — use `repro.api.KernelKMeans`.
 
-    Memory: O(r' n) for the sketch + O(n * block) transient stripe — the
-    kernel matrix is never formed.
+    Delegates to the unified estimator API's one-pass backend (the exact
+    same randomized_eig + K-means calls with the same key split, so
+    results are bit-identical to the historical function). Kept so old
+    call sites — including ones passing a raw kernel *callable*, which
+    the spec-driven `KernelKMeans` does not accept — keep working.
     """
+    warnings.warn(
+        "one_pass_kernel_kmeans is deprecated; use repro.api.KernelKMeans("
+        "k=..., r=..., backend='onepass-srht').fit(X, key) (or "
+        "repro.api.get_backend(...) for a raw-callable kernel)",
+        DeprecationWarning, stacklevel=2)
+    from repro.api.backends import get_backend   # lazy: api builds on core
     k_sketch, k_km = jax.random.split(key)
-    eig = sk.randomized_eig(k_sketch, kernel, X, r, oversampling, block,
-                            sketch_type, fwht_fn)
-    km = kmeans(k_km, eig.Y.T, k, n_restarts=n_restarts, max_iter=max_iter)
-    return OnePassResult(labels=km.labels, Y=eig.Y, eigvals=eig.eigvals,
+    emb = get_backend(f"onepass-{sketch_type}").fit(
+        k_sketch, kernel, X, r, block=block, oversampling=oversampling,
+        fwht_fn=fwht_fn)
+    km = kmeans(k_km, emb.Y.T, k, n_restarts=n_restarts, max_iter=max_iter)
+    return OnePassResult(labels=km.labels, Y=emb.Y, eigvals=emb.eigvals,
                          kmeans=km)
 
 

@@ -29,12 +29,17 @@ def main():
     ap.add_argument("--degree", type=int, default=2)
     ap.add_argument("--gamma", type=float, default=0.0)
     ap.add_argument("--block", type=int, default=512)
+    ap.add_argument("--backend", default="onepass-srht",
+                    choices=["onepass-srht", "onepass-gaussian", "nystrom",
+                             "exact"],
+                    help="approximation backend (single-device path; "
+                         "--distributed always runs the sharded one-pass)")
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    from repro.core import (make_kernel, one_pass_kernel_kmeans,
-                            clustering_accuracy, nmi,
+    from repro.api import KernelKMeans
+    from repro.core import (make_kernel, clustering_accuracy, nmi,
                             kernel_approx_error_streaming)
     from repro.data import blob_ring, segmentation_proxy, gaussian_blobs
 
@@ -50,9 +55,10 @@ def main():
         X, labels = gaussian_blobs(key, n=args.n, p=16, k=args.k)
         k = args.k
     k = args.k or k
-    kern = make_kernel(args.kernel, gamma=args.gamma,
-                       **({"degree": args.degree}
-                          if args.kernel == "polynomial" else {}))
+    kernel_params = ({"gamma": args.gamma, "degree": args.degree}
+                     if args.kernel == "polynomial" else
+                     {"gamma": args.gamma} if args.kernel == "rbf" else {})
+    kern = make_kernel(args.kernel, **kernel_params)
 
     t0 = time.time()
     if args.distributed:
@@ -72,10 +78,14 @@ def main():
         pred = np.asarray(res.labels)[: X.shape[1]]
         Y = np.asarray(res.Y)[:, : X.shape[1]]
     else:
-        res = one_pass_kernel_kmeans(jax.random.PRNGKey(args.seed + 1),
-                                     kern, X, k=k, r=args.r,
-                                     oversampling=args.l, block=args.block)
-        pred, Y = np.asarray(res.labels), res.Y
+        backend_params = ({"oversampling": args.l}
+                          if args.backend.startswith("onepass-") else {})
+        est = KernelKMeans(k=k, r=args.r, kernel=args.kernel,
+                           kernel_params=kernel_params,
+                           backend=args.backend,
+                           backend_params=backend_params, block=args.block)
+        est.fit(X, key=jax.random.PRNGKey(args.seed + 1))
+        pred, Y = np.asarray(est.labels_), est.embedding_
     dt = time.time() - t0
 
     err = kernel_approx_error_streaming(kern, X, jnp.asarray(Y),

@@ -1,17 +1,24 @@
 """Serving launcher: fit -> persist artifact -> load -> drive query load.
 
-End-to-end demo/check of repro.serve on synthetic data:
+End-to-end demo/check of the estimator API + repro.serve on synthetic
+data, for ANY approximation backend (--backend onepass-srht |
+onepass-gaussian | nystrom | exact):
 
-  1. fit a one-pass kernel clustering (Alg. 1) on blob+ring data,
+  1. fit a kernel clustering through `repro.api.KernelKMeans` on
+     blob+ring data,
   2. save the FittedModel artifact and load it back through the registry,
   3. verify the artifact serves correctly:
        - out-of-sample embeddings of the TRAINING points reproduce the
-         fitted Y (the extension identity; rel err <= 1e-4),
+         fitted linearization Y (the extension identity; rel err <= 1e-4
+         — gated for low-rank kernels on the training-set backends and
+         for the Nystrom backend on EVERY kernel, where the identity
+         holds by construction),
        - bucketed/batched assignment == unbatched assignment exactly,
   4. drive synthetic query load and write BENCH_serve.json: synchronous
      assignments/sec per batch size (--bench sync), async latency
      percentiles p50/p95/p99 + SLO accounting through AsyncBatcher
-     (--bench async), or both (--bench all, the default),
+     (--bench async), the per-backend accuracy/memory/throughput sweep
+     (--bench backends), or everything (--bench all, the default),
   5. verify the async path resolves futures bit-identically to a
      synchronous drain of the same requests,
   6. with --swap, exercise the model lifecycle: publish versions to a
@@ -25,6 +32,8 @@ End-to-end demo/check of repro.serve on synthetic data:
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_cluster --smoke --swap
+  PYTHONPATH=src python -m repro.launch.serve_cluster --smoke \
+      --backend nystrom            # full stack on a Nystrom fit
   PYTHONPATH=src python -m repro.launch.serve_cluster --n 8000 --r 2 \
       --batch-sizes 64,512,4096 --queries 8192 --bench all --slo-ms 250
 """
@@ -52,15 +61,25 @@ def main():
                     help="kernel gamma; defaults to 0.0 for polynomial, "
                          "1.0 for rbf")
     ap.add_argument("--block", type=int, default=512)
+    ap.add_argument("--backend", default=None,
+                    choices=["onepass-srht", "onepass-gaussian", "nystrom",
+                             "exact"],
+                    help="approximation backend (default: onepass-<sketch>)")
+    ap.add_argument("--nystrom-m", type=int, default=None,
+                    help="landmark count for --backend nystrom "
+                         "(default: repro.api default, 16r floored at 64)")
     ap.add_argument("--sketch", default="srht",
-                    choices=["srht", "gaussian"])
+                    choices=["srht", "gaussian"],
+                    help="one-pass sketch type (legacy spelling of "
+                         "--backend onepass-<sketch>)")
     ap.add_argument("--artifact-dir", default="serve_artifacts/demo")
     ap.add_argument("--batch-sizes", default="64,512")
     ap.add_argument("--queries", type=int, default=2048,
                     help="synthetic queries for the equality check")
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--bench", default="all",
-                    choices=["sync", "async", "fused", "swap", "all"],
+                    choices=["sync", "async", "fused", "swap", "backends",
+                             "all"],
                     help="which benchmark modes land in BENCH_serve.json")
     ap.add_argument("--swap", action="store_true",
                     help="exercise the model lifecycle: publish versions, "
@@ -85,26 +104,32 @@ def main():
     ap.add_argument("--sharded", action="store_true",
                     help="shard the extension matmul over all local "
                          "devices (needs >= 2)")
-    ap.add_argument("--bench-passes", type=int, default=1,
+    ap.add_argument("--bench-passes", type=int, default=None,
                     help="bench repetitions; BENCH_serve.json gets the "
-                         "per-metric median (smoke forces >= 3 so the CI "
-                         "regression gate diffs stable numbers)")
+                         "per-metric median. Default: 1, or 3 under "
+                         "--smoke (so the CI regression gate diffs "
+                         "stable numbers); an explicit value is always "
+                         "honoured")
     ap.add_argument("--bench-out", default="BENCH_serve.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.smoke:
         args.n = min(args.n, 2000)
         args.queries = min(args.queries, 1024)
-        args.bench_passes = max(args.bench_passes, 3)
+    if args.bench_passes is None:
+        args.bench_passes = 3 if args.smoke else 1
+    backend = args.backend or f"onepass-{args.sketch}"
 
+    from repro.api import KernelKMeans
     from repro.data import blob_ring
     from repro.serve import (DEFAULT_REGISTRY, ShardedExtender, assign,
-                             embed, fit_model, save_model, write_bench)
+                             embed, write_bench)
     from repro.serve.bench import format_bench, run_benches
+    from repro.serve.extend import _projection
 
     key = jax.random.PRNGKey(args.seed)
     k_fit, k_query = jax.random.split(key)
-    X, _ = blob_ring(key, n=args.n)
+    X, labels = blob_ring(key, n=args.n)
     # gamma=0.0 is the right homogeneous-polynomial default but makes rbf a
     # degenerate constant kernel — pick the per-kernel default when unset.
     gamma = args.gamma if args.gamma is not None else \
@@ -112,29 +137,40 @@ def main():
     params = ({"gamma": gamma, "degree": args.degree}
               if args.kernel == "polynomial" else
               {"gamma": gamma} if args.kernel == "rbf" else {})
+    backend_params = {}
+    if backend.startswith("onepass-"):
+        backend_params["oversampling"] = args.l
+    elif backend == "nystrom" and args.nystrom_m is not None:
+        backend_params["m"] = args.nystrom_m
 
     t0 = time.time()
-    model = fit_model(k_fit, X, k=args.k, r=args.r, kernel=args.kernel,
-                      kernel_params=params, oversampling=args.l,
-                      block=args.block, sketch_type=args.sketch)
+    est = KernelKMeans(k=args.k, r=args.r, kernel=args.kernel,
+                       kernel_params=params, backend=backend,
+                       backend_params=backend_params, block=args.block)
+    est.fit(X, key=k_fit)
+    model = est.model_
     t_fit = time.time() - t0
-    print(f"fit: n={args.n} r={args.r} l={args.l} kernel={args.kernel} "
-          f"sketch={args.sketch} in {t_fit:.2f} s")
+    print(f"fit: n={args.n} r={args.r} backend={backend} "
+          f"kernel={args.kernel} ({est!r}) in {t_fit:.2f} s")
 
-    path = save_model(model, args.artifact_dir)
+    path = est.save(args.artifact_dir)
     served = DEFAULT_REGISTRY.load("demo", path)
     print(f"artifact saved + loaded: {path}")
 
-    # Check 1: the extension reproduces the fitted Y on training points.
-    # The identity y(x_j) = Y e_j is exact only when the kernel matrix is
-    # numerically rank <= r' (polynomial/linear); a full-rank kernel (rbf)
-    # keeps the irreducible rank-r truncation residual, so there the number
-    # is reported but not gated.
-    Y_ext = embed(served, served.X_train)
-    rel = (float(jnp.linalg.norm(Y_ext - served.Y)) /
-           float(jnp.linalg.norm(served.Y)))
+    # Check 1: the extension reproduces the fitted linearization Y on the
+    # training points. For the training-set backends (one-pass / exact)
+    # the identity y(x_j) = Y e_j is exact only when the kernel matrix is
+    # numerically rank <= r' (polynomial/linear); a full-rank kernel
+    # (rbf) keeps the irreducible rank-r truncation residual, so there
+    # the number is reported but not gated. The Nystrom backend's fitted
+    # Y IS the landmark extension evaluated on the training columns, so
+    # the identity is exact for EVERY kernel and always gated.
+    Y_ext = embed(served, np.asarray(X, np.float32))
+    Y_fit = est.embedding_
+    rel = (float(jnp.linalg.norm(Y_ext - Y_fit)) /
+           float(jnp.linalg.norm(Y_fit)))
     print(f"train-point round-trip rel err: {rel:.2e}")
-    if args.kernel in ("polynomial", "linear"):
+    if backend == "nystrom" or args.kernel in ("polynomial", "linear"):
         assert rel <= 1e-4, f"extension inconsistent with fit: {rel:.2e}"
     else:
         print("  (full-rank kernel: residual is the rank-r truncation "
@@ -170,8 +206,10 @@ def main():
     labels_async = np.concatenate([f.result()[0] for f in futs])
     assert np.array_equal(labels_bucketed, labels_async), \
         "async scheduling changed assignments"
+    buckets_seen = sorted(sched.latency.by_bucket)
     print(f"async == sync on {args.queries} queries "
-          f"({sched.latency.requests} requests recorded)")
+          f"({sched.latency.requests} requests recorded; per-bucket "
+          f"breakdown over buckets {buckets_seen})")
 
     # Check 4 (--swap): model lifecycle — publish versions, GC, warm
     # hot-swap the live row while async requests are pending.
@@ -239,8 +277,8 @@ def main():
     batch_sizes = [int(b) for b in args.batch_sizes.split(",") if b.strip()]
     if not batch_sizes:
         ap.error(f"--batch-sizes {args.batch_sizes!r} parses to nothing")
-    modes = (("sync", "async", "fused", "swap") if args.bench == "all"
-             else (args.bench,))
+    modes = (("sync", "async", "fused", "swap", "backends")
+             if args.bench == "all" else (args.bench,))
     embed_fused = {"auto": None, "on": True, "off": False}[args.fused_embed]
     from repro.serve import median_benches
     bench = median_benches([
@@ -249,7 +287,8 @@ def main():
                     embed_fused=embed_fused,
                     interpret=True if args.interpret else None,
                     n_requests=args.async_requests,
-                    max_wait_ms=args.max_wait_ms, slo_ms=args.slo_ms)
+                    max_wait_ms=args.max_wait_ms, slo_ms=args.slo_ms,
+                    data=(X, labels))
         for _ in range(max(args.bench_passes, 1))])
     write_bench(args.bench_out, bench)
     print(format_bench(bench))
@@ -272,6 +311,21 @@ def main():
         assert rel_f <= 1e-5, \
             f"fused extend_embed stripe != two-pass: {rel_f:.2e}"
         print(f"fused extend_embed stripe agrees (rel err {rel_f:.2e})")
+        # Backend-specific ground truth: the served assignment must match
+        # a direct evaluation of the backend's own extension formula
+        # y(x) = Sigma^{-1/2} U^T kappa(ref, x) — for --backend nystrom
+        # this is the "assign parity with a direct Nystrom embedding"
+        # acceptance check.
+        P = _projection(served)
+        Y_direct = P @ served.kernel_fn()(served.extension_ref, small)
+        d2 = (jnp.sum(Y_direct.T ** 2, 1)[:, None]
+              + jnp.sum(served.centroids ** 2, 1)[None, :]
+              - 2.0 * Y_direct.T @ served.centroids.T)
+        lab_direct = np.asarray(jnp.argmin(d2, axis=1), np.int32)
+        assert np.array_equal(lab_direct, np.asarray(lab_jnp)), \
+            f"served assignment != direct {backend} embedding assignment"
+        print(f"served stack agrees with the direct {backend} extension "
+              f"(256 queries)")
     print("serve_cluster: OK")
 
 

@@ -1,13 +1,17 @@
 """repro.serve: fit once, assign millions — out-of-sample inference.
 
-The training side (repro.core) produces a compact linearization
-Y = Sigma^{1/2} U^T of the kernel matrix; this package turns that fit into
-a deployable service:
+The fitting side (repro.api.KernelKMeans over the pluggable approximation
+backends — one-pass SRHT/Gaussian, Nystrom, exact) produces a compact
+rank-r linearization of the kernel matrix; this package turns that fit —
+WHICHEVER backend produced it — into a deployable service:
 
-  artifact.py   FittedModel pytree + atomic save/load (ModelSpec sidecar,
-                arrays via repro.distributed.checkpoint)
+  artifact.py   FittedModel pytree + atomic save/load (ClusteringSpec
+                sidecar, arrays via repro.distributed.checkpoint,
+                optional bf16 storage); backend-specific extension state
+                (sketch state, Nystrom landmarks) rides along
   extend.py     streaming Nystrom-style out-of-sample extension
-                y(x) = Sigma^{-1/2} U^T kappa(X_train, x) and cluster
+                y(x) = Sigma^{-1/2} U^T kappa(ref, x) — ref being the
+                training set or the Nystrom landmarks — and cluster
                 assignment; Extender runs each stripe either through the
                 fused gram->projection Pallas kernel
                 (kernels/extend_embed, the off-CPU default — the
@@ -33,13 +37,13 @@ CLI: `python -m repro.launch.serve_cluster --smoke` round-trips
 fit -> save -> load -> query; `--bench async` reports latency percentiles.
 Docs: docs/SERVING.md (serving semantics), docs/ARCHITECTURE.md (layers).
 """
-from repro.serve.artifact import (FittedModel, ModelSpec, fit_model,
-                                  load_model, save_model)
+from repro.serve.artifact import (ClusteringSpec, FittedModel, ModelSpec,
+                                  fit_model, load_model, save_model)
 from repro.serve.batcher import MicroBatcher, bucket_size
 from repro.serve.bench import (benchmark_assign, benchmark_async,
-                               benchmark_fused, benchmark_swap,
-                               format_bench, median_benches, run_benches,
-                               write_bench)
+                               benchmark_backends, benchmark_fused,
+                               benchmark_swap, format_bench,
+                               median_benches, run_benches, write_bench)
 from repro.serve.extend import (Extender, ShardedExtender, assign, embed,
                                 embed_sharded, resolve_pallas_path)
 from repro.serve.latency import LatencyStats
@@ -51,10 +55,11 @@ from repro.serve.versions import (VersionStore, gc_versions,
                                   publish_version)
 
 __all__ = [
-    "FittedModel", "ModelSpec", "fit_model", "load_model", "save_model",
+    "ClusteringSpec", "FittedModel", "ModelSpec", "fit_model",
+    "load_model", "save_model",
     "MicroBatcher", "bucket_size",
-    "benchmark_assign", "benchmark_async", "benchmark_fused",
-    "benchmark_swap",
+    "benchmark_assign", "benchmark_async", "benchmark_backends",
+    "benchmark_fused", "benchmark_swap",
     "format_bench", "median_benches", "run_benches", "write_bench",
     "Extender", "ShardedExtender", "assign", "embed", "embed_sharded",
     "resolve_pallas_path",

@@ -1,33 +1,49 @@
-"""FittedModel: the deployable artifact of a one-pass kernel-clustering fit.
+"""FittedModel: the deployable artifact of a kernel-clustering fit.
 
-A fit (Alg. 1) collapses to a small set of arrays that fully determine the
-serving-time behaviour:
+A fit — whatever approximation backend produced it (see
+`repro.api.backends`) — collapses to a small set of arrays that fully
+determine the serving-time behaviour:
 
-    X_train    (p, n)     training data — the extension path evaluates
-                          kappa(X_train, x_new) against it in stripes
-    U          (n, r)     orthonormal eigenvector basis of K_hat = U S U^T
-    eigvals    (r,)       eigenvalues S (descending, >= 0)
+    X_train    (p, n)     training data
+    U          (n_ref, r) orthonormal eigenvector basis of the
+                          approximation's extension operator: rows index
+                          the training points (one-pass / exact) or the
+                          Nystrom landmarks
+    eigvals    (r,)       matching eigenvalues (descending, >= 0)
     centroids  (k, r)     K-means centroids in the linearized space
-    sketch_*              the SRHT state (signs of D, sampled rows of R) or
-                          the dense Gaussian Omega — not needed to serve,
-                          but persisted so the fit is reproducible from the
+    sketch_*              one-pass state: SRHT signs/rows or the dense
+                          Gaussian Omega — not needed to serve, but
+                          persisted so the fit is reproducible from the
                           artifact alone
+    landmarks  (p, m)     Nystrom backend: the sampled reference points;
+    landmark_idx (m,)     the extension evaluates kappa(landmarks, x)
+                          against them (O(m * block) per stripe instead
+                          of O(n * block)) — `extension_ref` picks the
+                          right reference set per backend
 
-plus a static `ModelSpec` (kernel name/params, dimensions, sketch type).
+plus a static `ClusteringSpec` (kernel name/params, dimensions, backend).
+`ModelSpec` is a legacy alias for `ClusteringSpec` — the spec is now the
+single frozen config shared by the estimator API (`repro.api.KernelKMeans`)
+and the artifact.
 
 On-disk artifact format (built on repro.distributed.checkpoint):
 
-    <dir>/spec.json        ModelSpec (static metadata)
+    <dir>/spec.json        ClusteringSpec (static metadata)
     <dir>/leaves.json      explicit leaf names of the array state, in
-                           checkpoint leaf order (sorted dict keys)
+                           checkpoint leaf order (sorted dict keys), plus
+                           the quantization map when saved with
+                           dtype="bf16" ({"quantized": {leaf: "bf16"}})
     <dir>/step_0/          atomic checkpoint of the array state
         manifest.json      flat-dict paths, shapes, dtypes
         leaf_<i>.npy       one file per array
 
 save/load reuse the checkpoint layer's atomic-rename commit, so a reader
 never observes a half-written artifact, and `read_manifest` rebuilds the
-restore skeleton without guessing shapes. Versioned deployments layer
-`serve/versions.py` on top of this format (one artifact dir per v_<N>).
+restore skeleton without guessing shapes. `save_model(..., dtype="bf16")`
+halves the float payload by storing bfloat16 bit patterns
+(distributed/compression.py codec); load transparently restores float32.
+Versioned deployments layer `serve/versions.py` on top of this format
+(one artifact dir per v_<N>).
 """
 from __future__ import annotations
 
@@ -35,52 +51,118 @@ import dataclasses
 import json
 import pathlib
 import re
+import warnings
 from typing import Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.kernels_fn import KernelFn, make_kernel
-from repro.core.kmeans import kmeans
-from repro.core.sketch import SRHT, randomized_eig_with_state
+from repro.distributed import compression
 from repro.distributed import checkpoint as ckpt
 
 
 @dataclasses.dataclass(frozen=True)
-class ModelSpec:
-    """Static (non-array) metadata of a fitted model."""
-    kernel: str                  # registry name: polynomial | rbf | linear
-    kernel_params: Dict          # e.g. {"gamma": 0.0, "degree": 2}
-    n: int                       # training points
-    p: int                       # input dimension
-    r: int                       # target rank (= serving embed dim)
-    k: int                       # clusters
-    oversampling: int            # l; r' = r + l
-    block: int                   # streaming stripe width (memory budget)
-    sketch_type: str             # srht | gaussian
+class ClusteringSpec:
+    """The single frozen config of a kernel-clustering fit.
+
+    Drives `repro.api.KernelKMeans` and is persisted verbatim in the
+    artifact (spec.json), so a fit is reproducible from its spec + key.
+    `backend` names a registered approximation backend
+    (repro.api.backends: onepass-srht | onepass-gaussian | nystrom |
+    exact); `backend_params` carries its knobs (oversampling for
+    one-pass, m for Nystrom). n/p are bound at fit time from the data.
+
+    Subsumes the pre-estimator-API `ModelSpec` (which hard-coded the
+    one-pass backend as oversampling/sketch_type fields); `from_json`
+    still reads those legacy artifacts.
+    """
+    kernel: str = "polynomial"          # registry name (core/kernels_fn)
+    kernel_params: Dict = dataclasses.field(default_factory=dict)
+    k: int = 2                          # clusters
+    r: int = 2                          # target rank (= serving embed dim)
+    backend: str = "onepass-srht"       # approximation backend
+    backend_params: Dict = dataclasses.field(default_factory=dict)
+    block: int = 512                    # streaming stripe width
+    n_restarts: int = 10                # K-means restarts
+    max_iter: int = 20                  # K-means Lloyd iterations
+    n: Optional[int] = None             # training points (bound at fit)
+    p: Optional[int] = None             # input dimension (bound at fit)
+
+    # -- legacy views (pre-backend ModelSpec fields) ---------------------
+
+    @property
+    def sketch_type(self) -> Optional[str]:
+        """'srht' | 'gaussian' for one-pass backends, else None."""
+        if self.backend.startswith("onepass-"):
+            return self.backend.split("-", 1)[1]
+        return None
+
+    @property
+    def oversampling(self) -> int:
+        return int(self.backend_params.get("oversampling", 10))
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=1, sort_keys=True)
 
     @classmethod
-    def from_json(cls, text: str) -> "ModelSpec":
-        return cls(**json.loads(text))
+    def from_json(cls, text: str) -> "ClusteringSpec":
+        d = json.loads(text)
+        # Legacy ModelSpec schema: oversampling/sketch_type at top level,
+        # no backend fields, no K-means params.
+        if "backend" not in d:
+            d["backend"] = f"onepass-{d.pop('sketch_type', 'srht')}"
+            d["backend_params"] = {"oversampling": d.pop("oversampling", 10)}
+        d.pop("sketch_type", None)
+        return cls(**d)
+
+
+# Legacy alias: every pre-estimator-API call site (and pickle/json of
+# the old name) keeps working.
+ModelSpec = ClusteringSpec
 
 
 class FittedModel(NamedTuple):
     """Deployable fit artifact; see module docstring for the field model."""
-    spec: ModelSpec
+    spec: ClusteringSpec
     X_train: jnp.ndarray               # (p, n)
-    U: jnp.ndarray                     # (n, r)
+    U: jnp.ndarray                     # (n_ref, r)
     eigvals: jnp.ndarray               # (r,)
     centroids: jnp.ndarray             # (k, r)
     sketch_signs: Optional[jnp.ndarray] = None   # (n_pad,)  srht only
     sketch_rows: Optional[jnp.ndarray] = None    # (r',)     srht only
     sketch_omega: Optional[jnp.ndarray] = None   # (n, r')   gaussian only
+    landmarks: Optional[jnp.ndarray] = None      # (p, m)    nystrom only
+    landmark_idx: Optional[jnp.ndarray] = None   # (m,)      nystrom only
+
+    @property
+    def extension_ref(self) -> jnp.ndarray:
+        """Reference points the out-of-sample extension evaluates the
+        kernel against: the Nystrom landmarks when present, else the
+        full training set. Shape (p, n_ref)."""
+        return self.landmarks if self.landmarks is not None else self.X_train
+
+    @property
+    def n_ref(self) -> int:
+        """Columns of `extension_ref` — the per-stripe kernel height the
+        serving path pays (m for Nystrom, n otherwise)."""
+        return int(self.extension_ref.shape[1])
 
     @property
     def Y(self) -> jnp.ndarray:
-        """Fitted linearization Sigma^{1/2} U^T in R^{r x n} (recomputed)."""
+        """Fitted linearization Sigma^{1/2} U^T in R^{r x n} (recomputed).
+
+        Only defined when U spans the training points (one-pass / exact
+        backends). A landmark-based (Nystrom) fit does not persist its
+        training linearization — embed the training data through the
+        extension instead (exact on training points by construction).
+        """
+        if self.landmarks is not None:
+            raise AttributeError(
+                f"backend {self.spec.backend!r} is landmark-based: U spans "
+                f"the {self.n_ref} landmarks, not the training set — use "
+                f"serve.extend.embed(model, model.X_train) for the "
+                f"training linearization")
         return jnp.sqrt(self.eigvals)[:, None] * self.U.T
 
     def kernel_fn(self) -> KernelFn:
@@ -106,55 +188,64 @@ def fit_model(key: jax.Array, X: jnp.ndarray, k: int, r: int,
               oversampling: int = 10, block: int = 512,
               sketch_type: str = "srht",
               n_restarts: int = 10, max_iter: int = 20) -> FittedModel:
-    """Fit once: Alg. 1 (linearize + K-means) packaged as a FittedModel."""
-    if kernel_params is None:
-        kernel_params = ({"gamma": 0.0, "degree": 2}
-                         if kernel == "polynomial" else {})
-    spec = ModelSpec(kernel=kernel, kernel_params=dict(kernel_params),
-                     n=int(X.shape[1]), p=int(X.shape[0]), r=r, k=k,
-                     oversampling=oversampling, block=block,
-                     sketch_type=sketch_type)
-    kern = _cached_kernel(kernel, tuple(sorted(kernel_params.items())))
-    k_sketch, k_km = jax.random.split(key)
-    fit = randomized_eig_with_state(k_sketch, kern, X, r, oversampling,
-                                    block, sketch_type)
-    km = kmeans(k_km, fit.eig.Y.T, k, n_restarts=n_restarts,
-                max_iter=max_iter)
-    sketch = fit.sketch
-    srht = isinstance(sketch, SRHT)
-    return FittedModel(
-        spec=spec, X_train=jnp.asarray(X, jnp.float32),
-        U=fit.eig.U, eigvals=fit.eig.eigvals, centroids=km.centroids,
-        sketch_signs=sketch.signs if srht else None,
-        sketch_rows=sketch.rows if srht else None,
-        sketch_omega=None if srht else sketch.omega)
+    """DEPRECATED shim — use `repro.api.KernelKMeans`.
+
+    Delegates to the estimator front door with the matching one-pass
+    backend; same key split and sub-calls as the historical function, so
+    the returned FittedModel is bit-identical.
+    """
+    warnings.warn(
+        "fit_model is deprecated; use repro.api.KernelKMeans(k=..., r=..., "
+        "backend='onepass-srht', ...).fit(X, key).model_",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import KernelKMeans   # lazy: api builds on serve
+    est = KernelKMeans(k=k, r=r, kernel=kernel, kernel_params=kernel_params,
+                       backend=f"onepass-{sketch_type}",
+                       backend_params={"oversampling": oversampling},
+                       block=block, n_restarts=n_restarts, max_iter=max_iter)
+    return est.fit(X, key=key).model_
 
 
 # ---------------------------------------------------------------------------
 # save / load on top of repro.distributed.checkpoint
 # ---------------------------------------------------------------------------
 
+_OPTIONAL_LEAVES = ("sketch_signs", "sketch_rows", "sketch_omega",
+                    "landmarks", "landmark_idx")
+
+
 def _array_state(model: FittedModel) -> Dict[str, jnp.ndarray]:
     state = {"X_train": model.X_train, "U": model.U,
              "eigvals": model.eigvals, "centroids": model.centroids}
-    for name in ("sketch_signs", "sketch_rows", "sketch_omega"):
+    for name in _OPTIONAL_LEAVES:
         val = getattr(model, name)
         if val is not None:
             state[name] = val
     return state
 
 
-def save_model(model: FittedModel, artifact_dir: str) -> str:
-    """Persist atomically; returns the artifact directory."""
+def save_model(model: FittedModel, artifact_dir: str,
+               dtype: str = "f32") -> str:
+    """Persist atomically; returns the artifact directory.
+
+    dtype="bf16" stores every floating leaf as its bfloat16 bit pattern
+    (half the bytes; ~3 decimal digits of mantissa — assignment-grade,
+    see tests/test_serve.py) via the distributed/compression.py codec;
+    integer leaves and the spec are untouched and load_model transparently
+    restores float32 arrays.
+    """
     base = pathlib.Path(artifact_dir)
     base.mkdir(parents=True, exist_ok=True)
     state = _array_state(model)
+    quantized: Dict[str, str] = {}
+    if dtype not in ("f32", "float32"):
+        state, quantized = compression.quantize_state(state, dtype)
     ckpt.save_checkpoint(str(base), step=0, state=state, blocking=True)
     # Explicit leaf names, in checkpoint leaf order (jax flattens a dict
     # in sorted-key order) — load_model must not have to reverse-engineer
     # names out of jax.tree_util.keystr formatting.
     (base / "leaves.json").write_text(
-        json.dumps({"names": sorted(state)}))
+        json.dumps({"names": sorted(state), "quantized": quantized}))
     (base / "spec.json").write_text(model.spec.to_json())
     return str(base)
 
@@ -166,15 +257,19 @@ def save_model(model: FittedModel, artifact_dir: str) -> str:
 _KEYSTR_RE = re.compile(r"\['([^\]]+)'\]")
 
 
-def _leaf_names(base: pathlib.Path, manifest: Dict) -> List[str]:
-    """Leaf names of the artifact's flat array dict, in leaf order.
+def _leaf_names(base: pathlib.Path, manifest: Dict) -> tuple:
+    """(leaf names, quantized map) of the artifact's flat array dict.
 
-    Read from leaves.json when present; legacy artifacts (written before
-    names were persisted) fall back to parsing the manifest's keystr
-    paths."""
+    Names come from leaves.json when present (in leaf order); legacy
+    artifacts (written before names were persisted) fall back to parsing
+    the manifest's keystr paths. The quantized map records which leaves
+    were stored as bf16 bit patterns (empty for f32 artifacts)."""
     names_file = base / "leaves.json"
+    quantized: Dict[str, str] = {}
     if names_file.exists():
-        names = json.loads(names_file.read_text())["names"]
+        meta = json.loads(names_file.read_text())
+        names: List[str] = meta["names"]
+        quantized = meta.get("quantized", {})
     else:
         names = []
         for path in manifest["paths"]:
@@ -184,22 +279,26 @@ def _leaf_names(base: pathlib.Path, manifest: Dict) -> List[str]:
     if missing:
         raise ValueError(f"artifact at {base} lacks required leaves "
                          f"{sorted(missing)}; found {names}")
-    return names
+    return names, quantized
 
 
 def load_model(artifact_dir: str) -> FittedModel:
     base = pathlib.Path(artifact_dir)
-    spec = ModelSpec.from_json((base / "spec.json").read_text())
+    spec = ClusteringSpec.from_json((base / "spec.json").read_text())
     manifest = ckpt.read_manifest(str(base), step=0)
+    names, quantized = _leaf_names(base, manifest)
     state_like = {}
-    for name, shape, dtype in zip(_leaf_names(base, manifest),
-                                  manifest["shapes"],
+    for name, shape, dtype in zip(names, manifest["shapes"],
                                   manifest["dtypes"]):
         state_like[name] = jnp.zeros(shape, dtype=dtype)
     state, _ = ckpt.restore_checkpoint(str(base), state_like, step=0)
+    if quantized:
+        state = compression.dequantize_state(state, quantized)
     return FittedModel(spec=spec, X_train=state["X_train"], U=state["U"],
                        eigvals=state["eigvals"],
                        centroids=state["centroids"],
                        sketch_signs=state.get("sketch_signs"),
                        sketch_rows=state.get("sketch_rows"),
-                       sketch_omega=state.get("sketch_omega"))
+                       sketch_omega=state.get("sketch_omega"),
+                       landmarks=state.get("landmarks"),
+                       landmark_idx=state.get("landmark_idx"))

@@ -1,18 +1,24 @@
 """Out-of-sample extension: embed and assign new points against a fit.
 
-The fit gives K_hat = U Sigma U^T, so the Nystrom-style extension of a new
-point x is
+Every approximation backend (repro.api.backends) reduces to the same
+extension operator: eigenpairs (U, Sigma) over a set of REFERENCE points
+(`model.extension_ref` — the training set for one-pass/exact fits, the m
+sampled landmarks for Nystrom fits), and a new point x embeds as
 
-    y(x) = Sigma^{-1/2} U^T kappa(X_train, x)          in R^r
+    y(x) = Sigma^{-1/2} U^T kappa(ref, x)              in R^r
 
-which reproduces the fitted Y exactly on the training points whenever the
-kernel matrix is (numerically) rank <= r' — for a training point x_j,
-kappa(X_train, x_j) = K e_j = U Sigma U^T e_j and the formula collapses to
-Sigma^{1/2} U^T e_j = Y e_j.
+For one-pass/exact this reproduces the fitted Y exactly on training
+points whenever the kernel matrix is (numerically) rank <= r' — for a
+training point x_j, kappa(X_train, x_j) = K e_j = U Sigma U^T e_j and the
+formula collapses to Sigma^{1/2} U^T e_j = Y e_j. For Nystrom fits
+(U, Sigma) are the landmark-gram eigenpairs and the identity is exact BY
+CONSTRUCTION for every kernel (the fitted Y *is* this formula evaluated
+on the training columns), and the per-stripe kernel cost drops from
+n x block to m x block.
 
-Memory model (`Extender`): the (n, b) kernel block kappa(X_train, X_query)
-is never materialized beyond n x min(b, block) — query columns stream in
-stripes of the SAME `block` the training pass used, so serving never
+Memory model (`Extender`): the (n_ref, b) kernel block kappa(ref, X_query)
+is never materialized beyond n_ref x min(b, block) — query columns stream
+in stripes of the SAME `block` the training pass used, so serving never
 exceeds the training-time memory budget no matter how many queries arrive
 at once. Two stripe engines implement that contract:
 
@@ -63,6 +69,9 @@ from repro.kernels.extend_embed.ops import extend_embed_pallas
 from repro.kernels.kmeans_assign.ops import assign_pallas
 from repro.serve.artifact import FittedModel
 
+# Keep in sync with core/nystrom._ABS_EIG_FLOOR: the Nystrom fit floors
+# its truncation threshold here so fit and serve agree on which
+# directions are rank-deficient.
 _EIG_EPS = 1e-7
 
 # kernel_fn() falls back to these when the spec omits a param (see
@@ -177,6 +186,9 @@ class Extender:
             fused, interpret, "fused extend_embed stripe")
         self.assign_fused, self._assign_interpret = resolve_pallas_path(
             assign_fused, interpret, "Pallas kmeans_assign")
+        # Backend-agnostic: the reference set the kernel stripes run
+        # against (training points, or the Nystrom landmarks).
+        self._ref = model.extension_ref
         self._proj = _projection(model)
         self._statics = _kernel_statics(model.spec)
 
@@ -197,7 +209,7 @@ class Extender:
             Xqp = (Xq if b_pad == b
                    else jnp.pad(Xq, ((0, 0), (0, b_pad - b))))
             for start in range(0, b, block):
-                yb = _fused_stripe(model.X_train, self._proj, Xqp,
+                yb = _fused_stripe(self._ref, self._proj, Xqp,
                                    jnp.asarray(start), kind=kind,
                                    gamma=gamma, degree=degree, block=block,
                                    interpret=self._interpret)
@@ -207,7 +219,7 @@ class Extender:
             return out
         kern = model.kernel_fn()
         for start, stripe in stripe_iterator(kern, Xq, block,
-                                             lhs=model.X_train,
+                                             lhs=self._ref,
                                              pad_tail=True):
             yb = _project_stripe(self._proj, stripe)
             width = min(block, b - start)
@@ -320,9 +332,11 @@ class ShardedExtender:
             fused, interpret, "fused extend_embed stripe (sharded)")
         self.assign_fused, self._assign_interpret = resolve_pallas_path(
             assign_fused, interpret, "Pallas kmeans_assign")
-        n = model.spec.n
+        # Reference set (training points or Nystrom landmarks), padded to
+        # a column multiple of the shard count.
+        n = model.n_ref
         n_pad = -(-n // self.shards) * self.shards
-        Xt = model.X_train
+        Xt = model.extension_ref
         proj = _projection(model)
         if n_pad != n:
             Xt = jnp.pad(Xt, ((0, 0), (0, n_pad - n)))

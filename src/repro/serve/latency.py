@@ -111,26 +111,42 @@ class Histogram:
 
 
 class LatencyStats:
-    """Per-request latency accounting: queue-wait + total histograms and an
-    SLO-violation counter.
+    """Per-request latency accounting: queue-wait + total histograms, an
+    SLO-violation counter, and a per-bucket total-latency breakdown.
 
-    slo_ms=None disables SLO accounting (violations stay 0)."""
+    slo_ms=None disables SLO accounting (violations stay 0).
+
+    The per-bucket breakdown keys a separate total-latency Histogram by
+    the pow-2 bucket the request's flush batch ran through
+    (serve/batcher.py bucketing policy) — the knob-tuning read-out the
+    aggregate percentiles hide: a fat p99 can be one under-coalesced
+    bucket, not the whole pipeline. Callers that do not batch (or do not
+    know the bucket) simply omit `bucket` and only the aggregate
+    histograms move."""
 
     def __init__(self, slo_ms: Optional[float] = None):
         self.slo_ms = slo_ms
         self.queue_wait = Histogram()
         self.total = Histogram()
+        self.by_bucket: Dict[int, Histogram] = {}
         self.requests = 0
         self.queries = 0
         self.slo_violations = 0
 
     def record(self, enqueue_ts: float, flush_ts: float, complete_ts: float,
-               queries: int = 1) -> None:
-        """Record one request's life from its three timestamps (seconds)."""
+               queries: int = 1, bucket: Optional[int] = None) -> None:
+        """Record one request's life from its three timestamps (seconds).
+
+        `bucket` (optional) is the pow-2 execution bucket of the flush
+        that completed the request; it lands the total latency in the
+        per-bucket breakdown."""
         wait_ms = (flush_ts - enqueue_ts) * 1e3
         total_ms = (complete_ts - enqueue_ts) * 1e3
         self.queue_wait.record(wait_ms)
         self.total.record(total_ms)
+        if bucket is not None:
+            self.by_bucket.setdefault(int(bucket), Histogram()) \
+                .record(total_ms)
         self.requests += 1
         self.queries += int(queries)
         if self.slo_ms is not None and total_ms > self.slo_ms:
@@ -159,6 +175,18 @@ class LatencyStats:
                 "p95": w.percentile(95.0),
                 "p99": w.percentile(99.0),
             },
+            # Per-execution-bucket total latency (string keys: this dict
+            # is JSON-serialized verbatim into BENCH_serve.json).
+            "per_bucket": {
+                str(b): {
+                    "requests": h.n,
+                    "p50": h.percentile(50.0),
+                    "p95": h.percentile(95.0),
+                    "p99": h.percentile(99.0),
+                    "mean": h.mean,
+                }
+                for b, h in sorted(self.by_bucket.items())
+            },
             "slo_ms": self.slo_ms,
             "slo_violations": self.slo_violations,
             "slo_violation_rate": self.slo_violation_rate,
@@ -182,4 +210,9 @@ class LatencyStats:
             lines.append(f"{'SLO':>14s}: {self.slo_ms:g} ms, "
                          f"{self.slo_violations} violations "
                          f"({100.0 * self.slo_violation_rate:.2f}%)")
+        for b, h in sorted(self.by_bucket.items()):
+            lines.append(f"{f'bucket {b}':>14s}: "
+                         f"p50 {h.percentile(50.0):8.3f} ms  "
+                         f"p95 {h.percentile(95.0):8.3f} ms  "
+                         f"({h.n} requests)")
         return "\n".join(lines)

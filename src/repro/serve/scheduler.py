@@ -46,7 +46,7 @@ from typing import List, NamedTuple, Optional, Tuple
 import numpy as np
 
 from repro.serve.artifact import FittedModel
-from repro.serve.batcher import MicroBatcher
+from repro.serve.batcher import MicroBatcher, bucket_size
 from repro.serve.latency import LatencyStats
 
 
@@ -192,12 +192,20 @@ class AsyncBatcher:
                         p.future.set_exception(exc)
                 raise exc
             complete_ts = self.clock()
+            # The pow-2 execution bucket this flush ran through: the
+            # coalesced width, bucketed by the inner batcher's policy
+            # (oversized batches chunk into max_bucket pieces, so the
+            # clamp is also the dominant executable). Keys the per-bucket
+            # latency breakdown.
+            width = sum(p.Xq.shape[1] for p in batch)
+            bucket = bucket_size(width, self.batcher.min_bucket,
+                                 self.batcher.max_bucket)
             # LatencyStats mutation stays inside the flush lock: record()
             # is read-modify-write on histogram counts, and a pump-thread
             # flush can overlap a submit-triggered inline flush.
             for p in batch:
                 self.latency.record(p.enqueue_ts, flush_ts, complete_ts,
-                                    queries=p.Xq.shape[1])
+                                    queries=p.Xq.shape[1], bucket=bucket)
         # A client may have cancel()ed its future while the request sat in
         # the pending window; set_result on a cancelled future raises
         # InvalidStateError and would strand every LATER future in the

@@ -168,9 +168,10 @@ def check_sharded_extend():
     over 8 shards) — on BOTH stripe engines: the two-pass gram+projection
     body and the fused extend_embed Pallas kernel (interpret mode) run
     per device inside the shard_map."""
+    from repro.api import KernelKMeans
     from repro.data import blob_ring
     from repro.serve import (AsyncBatcher, MicroBatcher, ShardedExtender,
-                             assign, embed, fit_model)
+                             assign, embed)
 
     mesh = jax.make_mesh((8,), ("data",))
     X, _ = blob_ring(jax.random.PRNGKey(0), n=250)
@@ -179,8 +180,9 @@ def check_sharded_extend():
     # projection-padding argument, not just harmless zero kernel columns.
     for kernel, params, r in (("polynomial", {"gamma": 0.0, "degree": 2}, 2),
                               ("rbf", {"gamma": 1.0}, 4)):
-        m = fit_model(jax.random.PRNGKey(1), X, k=2, r=r, kernel=kernel,
-                      kernel_params=params, oversampling=10, block=64)
+        m = KernelKMeans(k=2, r=r, kernel=kernel, kernel_params=params,
+                         backend_params={"oversampling": 10},
+                         block=64).fit(X, key=jax.random.PRNGKey(1)).model_
         ext = ShardedExtender(m, mesh)
         Ys, Y1 = ext.embed(Xq), embed(m, Xq)
         rel = (float(jnp.linalg.norm(Ys - Y1)) /

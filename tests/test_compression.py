@@ -92,3 +92,39 @@ def test_ef_sgd_converges_on_quadratic():
     assert sketched_loss < 2.0 * exact_loss + 1e-8, (sketched_loss,
                                                      exact_loss)
     assert sketched_loss < 1e-4 * float(loss(jnp.zeros((d,))))
+
+
+# ---------------------------------------------------------------------------
+# quantized-artifact codec (bf16 storage for serve/artifact.py)
+# ---------------------------------------------------------------------------
+
+def test_bf16_codec_roundtrip_is_exact_on_bf16_values():
+    from repro.distributed.compression import bf16_decode, bf16_encode
+    x = jax.random.normal(jax.random.PRNGKey(0), (37, 5)) * 100.0
+    enc = bf16_encode(x)
+    assert enc.dtype == jnp.uint16 and enc.shape == x.shape
+    dec = bf16_decode(enc)
+    assert dec.dtype == jnp.float32
+    # decode(encode(x)) == the bf16 rounding of x, exactly.
+    want = jnp.asarray(x, jnp.bfloat16).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(want))
+    # And re-encoding is idempotent (bf16 values are fixed points).
+    np.testing.assert_array_equal(np.asarray(bf16_encode(dec)),
+                                  np.asarray(enc))
+
+
+def test_quantize_state_skips_integer_leaves():
+    from repro.distributed.compression import (dequantize_state,
+                                               quantize_state)
+    state = {"w": jnp.arange(6, dtype=jnp.float32) / 7.0,
+             "idx": jnp.arange(4, dtype=jnp.int32)}
+    enc, quantized = quantize_state(state)
+    assert quantized == {"w": "bf16"}
+    assert enc["w"].dtype == jnp.uint16
+    assert enc["idx"].dtype == jnp.int32          # untouched
+    dec = dequantize_state(enc, quantized)
+    assert dec["w"].dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(dec["idx"]),
+                                  np.asarray(state["idx"]))
+    with pytest.raises(ValueError, match="unknown quantized dtype"):
+        quantize_state(state, dtype="fp4")

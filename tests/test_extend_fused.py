@@ -14,9 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import KernelKMeans
 from repro.data import blob_ring
 from repro.serve import (AsyncBatcher, Extender, MicroBatcher, assign,
-                         embed, fit_model)
+                         embed)
 from repro.serve.extend import resolve_pallas_path
 
 N, P, BLOCK = 250, 2, 64    # ragged: 250 = 3*64 + 58
@@ -24,8 +25,9 @@ N, P, BLOCK = 250, 2, 64    # ragged: 250 = 3*64 + 58
 
 def _fit(kernel, params, r=2, key=1):
     X, _ = blob_ring(jax.random.PRNGKey(0), n=N)
-    return fit_model(jax.random.PRNGKey(key), X, k=2, r=r, kernel=kernel,
-                     kernel_params=params, oversampling=10, block=BLOCK)
+    return KernelKMeans(k=2, r=r, kernel=kernel, kernel_params=params,
+                        backend_params={"oversampling": 10},
+                        block=BLOCK).fit(X, key=jax.random.PRNGKey(key)).model_
 
 
 @pytest.fixture(scope="module")

@@ -9,11 +9,11 @@ import jax
 import numpy as np
 import pytest
 
+from repro.api import KernelKMeans
 from repro.data import blob_ring
 from repro.serve import (AsyncBatcher, MicroBatcher, ModelRegistry,
-                         VersionStore, fit_model, latest_version,
-                         load_model, load_version, publish_version,
-                         save_model)
+                         VersionStore, latest_version, load_model,
+                         load_version, publish_version, save_model)
 from repro.serve import latency as lat
 
 N, P, R, K, BLOCK = 250, 2, 2, 2, 64
@@ -33,10 +33,10 @@ class FakeClock:
 @pytest.fixture(scope="module")
 def model():
     X, _ = blob_ring(jax.random.PRNGKey(0), n=N)
-    return fit_model(jax.random.PRNGKey(1), X, k=K, r=R,
-                     kernel="polynomial",
-                     kernel_params={"gamma": 0.0, "degree": 2},
-                     oversampling=10, block=BLOCK)
+    return KernelKMeans(k=K, r=R, kernel="polynomial",
+                        kernel_params={"gamma": 0.0, "degree": 2},
+                        backend_params={"oversampling": 10},
+                        block=BLOCK).fit(X, key=jax.random.PRNGKey(1)).model_
 
 
 @pytest.fixture(scope="module")

@@ -5,9 +5,10 @@ import jax
 import numpy as np
 import pytest
 
+from repro.api import KernelKMeans
 from repro.data import blob_ring
 from repro.serve import (AsyncBatcher, LatencyStats, MicroBatcher,
-                         ModelRegistry, fit_model)
+                         ModelRegistry)
 
 N, P, R, K, BLOCK = 250, 2, 2, 2, 64
 
@@ -26,10 +27,10 @@ class FakeClock:
 @pytest.fixture(scope="module")
 def model():
     X, _ = blob_ring(jax.random.PRNGKey(0), n=N)
-    return fit_model(jax.random.PRNGKey(1), X, k=K, r=R,
-                     kernel="polynomial",
-                     kernel_params={"gamma": 0.0, "degree": 2},
-                     oversampling=10, block=BLOCK)
+    return KernelKMeans(k=K, r=R, kernel="polynomial",
+                        kernel_params={"gamma": 0.0, "degree": 2},
+                        backend_params={"oversampling": 10},
+                        block=BLOCK).fit(X, key=jax.random.PRNGKey(1)).model_
 
 
 def _requests(widths, seed=0):
@@ -288,3 +289,47 @@ def test_histogram_empty_and_clamped():
     stats.record(0.0, 0.0, 1e9, queries=1)        # way past the last bucket
     assert stats.slo_violations == 1
     assert stats.total.percentile(50.0) >= 1e7    # clamps, does not crash
+
+
+# ---------------------------------------------------------------------------
+# per-bucket latency breakdown
+# ---------------------------------------------------------------------------
+
+def test_per_bucket_latency_breakdown(model):
+    """Each flush lands its requests' total latency under the pow-2
+    execution bucket of the coalesced batch; unbatched callers (no
+    bucket) leave the breakdown untouched."""
+    clock = FakeClock()
+    ab = AsyncBatcher(model, max_wait_ms=5.0, clock=clock,
+                      min_bucket=8, max_bucket=128)
+    # Flush 1: widths 3 + 4 = 7 -> bucket 8 (clamped to min_bucket).
+    for req in _requests([3, 4]):
+        ab.submit(req)
+    ab.flush()
+    # Flush 2: widths 40 + 30 = 70 -> bucket 128.
+    clock.advance_ms(1.0)
+    for req in _requests([40, 30], seed=1):
+        ab.submit(req)
+    ab.flush()
+    assert sorted(ab.latency.by_bucket) == [8, 128]
+    assert ab.latency.by_bucket[8].n == 2
+    assert ab.latency.by_bucket[128].n == 2
+    s = ab.latency.summary()
+    assert set(s["per_bucket"]) == {"8", "128"}
+    assert s["per_bucket"]["8"]["requests"] == 2
+    # Aggregate count equals the per-bucket counts (every async request
+    # is attributed to exactly one bucket).
+    assert sum(row["requests"] for row in s["per_bucket"].values()) \
+        == s["requests"]
+    # Oversized coalesced batches clamp to max_bucket (they chunk into
+    # max_bucket executables).
+    for req in _requests([100, 100, 100], seed=2):
+        ab.submit(req)
+    ab.flush()
+    assert ab.latency.by_bucket[128].n == 5
+    # A bucket-less record only moves the aggregate histograms.
+    stats = LatencyStats()
+    stats.record(0.0, 0.1, 0.2)
+    assert stats.by_bucket == {} and stats.summary()["per_bucket"] == {}
+    # The breakdown shows up in the human-readable table too.
+    assert "bucket 128" in ab.latency.format_table()

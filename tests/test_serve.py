@@ -4,11 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import KernelKMeans
 from repro.core.kernels_fn import polynomial_kernel, stripe_iterator
 from repro.data import blob_ring
 from repro.serve import (ModelRegistry, MicroBatcher, assign, bucket_size,
-                         benchmark_assign, embed, fit_model, load_model,
-                         save_model)
+                         benchmark_assign, embed, load_model, save_model)
 
 N, P, R, K, BLOCK = 250, 2, 2, 2, 64   # ragged: 250 = 3*64 + 58
 
@@ -16,10 +16,10 @@ N, P, R, K, BLOCK = 250, 2, 2, 2, 64   # ragged: 250 = 3*64 + 58
 @pytest.fixture(scope="module")
 def model():
     X, _ = blob_ring(jax.random.PRNGKey(0), n=N)
-    return fit_model(jax.random.PRNGKey(1), X, k=K, r=R,
-                     kernel="polynomial",
-                     kernel_params={"gamma": 0.0, "degree": 2},
-                     oversampling=10, block=BLOCK)
+    return KernelKMeans(k=K, r=R, kernel="polynomial",
+                        kernel_params={"gamma": 0.0, "degree": 2},
+                        backend_params={"oversampling": 10},
+                        block=BLOCK).fit(X, key=jax.random.PRNGKey(1)).model_
 
 
 def test_train_points_reproduce_fitted_Y(model):
@@ -35,10 +35,10 @@ def test_embedding_inner_products_match_kernel():
     rank covers the kernel's feature space (r=3 for homogeneous poly d=2,
     p=2)."""
     X, _ = blob_ring(jax.random.PRNGKey(0), n=N)
-    m3 = fit_model(jax.random.PRNGKey(1), X, k=K, r=3,
-                   kernel="polynomial",
-                   kernel_params={"gamma": 0.0, "degree": 2},
-                   oversampling=10, block=BLOCK)
+    m3 = KernelKMeans(k=K, r=3, kernel="polynomial",
+                      kernel_params={"gamma": 0.0, "degree": 2},
+                      backend_params={"oversampling": 10},
+                      block=BLOCK).fit(X, key=jax.random.PRNGKey(1)).model_
     Xq = jax.random.normal(jax.random.PRNGKey(2), (P, 40)) * 1.5
     Yq = embed(m3, Xq)
     kern = polynomial_kernel(gamma=0.0, degree=2)
@@ -62,10 +62,56 @@ def test_save_load_roundtrip(model, tmp_path):
                                   np.asarray(embed(model, Xq)))
 
 
+def test_save_load_bf16_roundtrip(model, tmp_path):
+    """dtype="bf16" halves the float payload (uint16 bit patterns via
+    distributed/compression.py) and round-trips to float32 within bf16
+    precision; assignments survive the quantization."""
+    import pathlib
+
+    f32_dir = save_model(model, str(tmp_path / "f32"))
+    bf16_dir = save_model(model, str(tmp_path / "bf16"), dtype="bf16")
+
+    def payload(d):
+        return sum(p.stat().st_size
+                   for p in (pathlib.Path(d) / "step_0").glob("leaf_*.npy"))
+
+    # X_train/U/eigvals/centroids/sketch_signs halve; int leaves
+    # (sketch_rows) don't — so strictly between 50% and 100%.
+    assert payload(bf16_dir) < 0.6 * payload(f32_dir)
+
+    loaded = load_model(bf16_dir)
+    assert loaded.spec == model.spec
+    for name in ("X_train", "U", "eigvals", "centroids"):
+        got = np.asarray(getattr(loaded, name))
+        want = np.asarray(getattr(model, name))
+        assert got.dtype == np.float32
+        # bf16 has an 8-bit mantissa: exact to ~3 decimal digits.
+        np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-3)
+    # Integer sketch rows must survive bit-exact (they index the FWHT).
+    np.testing.assert_array_equal(np.asarray(loaded.sketch_rows),
+                                  np.asarray(model.sketch_rows))
+
+    Xq = jax.random.normal(jax.random.PRNGKey(7), (P, 128)) * 1.5
+    lab_f32, _ = assign(model, Xq)
+    lab_bf16, _ = assign(loaded, Xq)
+    agree = float(np.mean(np.asarray(lab_f32) == np.asarray(lab_bf16)))
+    assert agree >= 0.99, f"bf16 artifact changed {1 - agree:.1%} of labels"
+    Y32 = embed(model, Xq)
+    Y16 = embed(loaded, Xq)
+    rel = (float(jnp.linalg.norm(Y16 - Y32)) /
+           max(float(jnp.linalg.norm(Y32)), 1e-30))
+    assert rel <= 2e-2, rel
+
+
+def test_save_model_rejects_unknown_dtype(model, tmp_path):
+    with pytest.raises(ValueError, match="unknown quantized dtype"):
+        save_model(model, str(tmp_path / "x"), dtype="int3")
+
+
 def test_save_load_gaussian_sketch(tmp_path):
     X, _ = blob_ring(jax.random.PRNGKey(4), n=128)
-    m = fit_model(jax.random.PRNGKey(5), X, k=2, r=2, block=64,
-                  sketch_type="gaussian")
+    m = KernelKMeans(k=2, r=2, backend="onepass-gaussian",
+                     block=64).fit(X, key=jax.random.PRNGKey(5)).model_
     loaded = load_model(save_model(m, str(tmp_path / "g")))
     assert loaded.sketch_signs is None and loaded.sketch_rows is None
     np.testing.assert_array_equal(np.asarray(loaded.sketch_omega),
