@@ -16,11 +16,15 @@ Gated metrics:
   backends  per-backend clustering accuracy    (lower = regression;
             dimensionless — never speed-normalized)
             and assignments_per_sec            (lower = regression)
+  stream  partial_fit cols/sec                 (lower = regression)
+          re-eig wall seconds                  (higher = regression)
 
 Informational (reported, never gated): async queue-wait p95, the
 swap flip duration — at ~1 ms / ~1 us scale they are OS-scheduler
-jitter, not serving performance — and per-backend fit wall time
-(dominated by eigh/K-means restarts, too machine-noisy to gate).
+jitter, not serving performance — per-backend fit wall time
+(dominated by eigh/K-means restarts, too machine-noisy to gate), and
+the stream rollout's detection-to-swap latency (it embeds a full
+K-means refit, same noise class as fit_s).
 
 The committed baseline and the CI runner are different (and
 burstable-CPU) machines, so raw wall-clock numbers drift with hardware
@@ -66,7 +70,8 @@ def _dig(d: Dict, *path):
 # swap p95s are gated like the async p95 they come from. Backend fit wall
 # time includes K-means restarts and eigh — too machine-noisy to gate,
 # unlike the same section's accuracy/throughput.
-INFO_METRICS = {"async/queue_wait_p95_ms", "swap/flip_ms"}
+INFO_METRICS = {"async/queue_wait_p95_ms", "swap/flip_ms",
+                "stream/detect_to_swap_s"}
 INFO_PREFIXES = ("backends/fit_s/",)
 # Dimensionless metrics: machine speed is irrelevant, never rescale.
 NO_NORMALIZE_PREFIXES = ("backends/accuracy/",)
@@ -107,6 +112,17 @@ def collect_metrics(bench: Dict) -> Dict[str, Tuple[float, bool]]:
                 float(row["assignments_per_sec"]), True)
         if "fit_s" in row:
             out[f"backends/fit_s/{name}"] = (float(row["fit_s"]), False)
+    # Streaming fit: ingest throughput and re-eig cost are gated; the
+    # rollout's detection-to-swap latency is info-only (INFO_METRICS).
+    cols = _dig(bench, "stream", "partial_fit_cols_per_sec")
+    if cols is not None:
+        out["stream/partial_fit_cols_per_sec"] = (float(cols), True)
+    reeig = _dig(bench, "stream", "reeig_s")
+    if reeig is not None:
+        out["stream/reeig_s"] = (float(reeig), False)
+    d2s = _dig(bench, "stream", "rollout", "detect_to_swap_s")
+    if d2s is not None:
+        out["stream/detect_to_swap_s"] = (float(d2s), False)
     return out
 
 

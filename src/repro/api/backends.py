@@ -42,7 +42,6 @@ import jax.numpy as jnp
 from repro.core.exact import exact_eig
 from repro.core.kernels_fn import KernelFn
 from repro.core.nystrom import nystrom
-from repro.core.sketch import randomized_eig_with_state
 
 
 class Embedding(NamedTuple):
@@ -134,15 +133,25 @@ def default_nystrom_m(n: int, r: int) -> int:
 
 def _onepass(sketch_type: str):
     def fit(key, kernel, X, r, *, block=512, oversampling=10,
-            fwht_fn=None, truncate_basis=False) -> Embedding:
-        out = randomized_eig_with_state(key, kernel, X, r, oversampling,
-                                        block, sketch_type, fwht_fn,
-                                        truncate_basis)
-        sk = out.sketch
-        state = ({"sketch_signs": sk.signs, "sketch_rows": sk.rows}
-                 if sketch_type == "srht" else {"sketch_omega": sk.omega})
-        return Embedding(Y=out.eig.Y, U=out.eig.U, eigvals=out.eig.eigvals,
-                         ref=None, state=state)
+            fwht_fn=None, truncate_basis=False, capacity=None) -> Embedding:
+        # One-shot fit is a single-chunk pass through the streaming
+        # accumulator (repro.stream.accumulate) — the SAME block-granular
+        # update sequence partial_fit replays, so a chunked fit over a
+        # full pass is bit-identical to this at the re-eig boundary. The
+        # sketch draw matches the historical randomized_eig_with_state
+        # contract (make_srht/make_gaussian on `key` at capacity=n).
+        # capacity > n pre-sizes the sketch so partial_fit can keep
+        # adding columns after this fit. Lazy import: repro.stream's
+        # retrain layer imports repro.api back.
+        from repro.stream.accumulate import SketchAccumulator
+        acc = SketchAccumulator(key, kernel, capacity or X.shape[1], r,
+                                oversampling=oversampling, block=block,
+                                sketch_type=sketch_type, fwht_fn=fwht_fn,
+                                truncate_basis=truncate_basis)
+        acc.add(X)
+        eig = acc.eig()
+        return Embedding(Y=eig.Y, U=eig.U, eigvals=eig.eigvals,
+                         ref=None, state=acc.state_arrays())
     return fit
 
 

@@ -122,6 +122,10 @@ class KernelKMeans:
         self.n_restarts = int(n_restarts)
         self.max_iter = int(max_iter)
         self.model_: Optional[FittedModel] = None
+        # Live streaming state (partial_fit); not part of the artifact —
+        # resume from a loaded model_ rebuilds it on demand.
+        self._acc = None
+        self._k_km: Optional[jax.Array] = None
         # Training-side attributes; stay None on the from_model()/load()
         # path (they are not part of the artifact).
         self.labels_ = None
@@ -134,34 +138,47 @@ class KernelKMeans:
 
     # -- fitting ---------------------------------------------------------
 
+    def _make_spec(self, n: int, p: int) -> ClusteringSpec:
+        return ClusteringSpec(
+            kernel=self.kernel, kernel_params=dict(self.kernel_params),
+            k=self.k, r=self.r, backend=self.backend,
+            backend_params=_spec_safe(self.backend_params),
+            block=self.block, n_restarts=self.n_restarts,
+            max_iter=self.max_iter, n=int(n), p=int(p))
+
+    def _kernel_fn(self):
+        return _cached_kernel(self.kernel,
+                              tuple(sorted(self.kernel_params.items())))
+
+    def _package(self, spec: ClusteringSpec, X: jnp.ndarray, U, eigvals,
+                 centroids, state: Dict, ref=None) -> FittedModel:
+        return FittedModel(
+            spec=spec, X_train=jnp.asarray(X, jnp.float32),
+            U=U, eigvals=eigvals, centroids=centroids,
+            sketch_signs=state.get("sketch_signs"),
+            sketch_rows=state.get("sketch_rows"),
+            sketch_omega=state.get("sketch_omega"),
+            landmarks=ref,
+            landmark_idx=state.get("landmark_idx"),
+            stream_w=state.get("stream_w"),
+            stream_row_norms2=state.get("stream_row_norms2"),
+            stream_counts=state.get("stream_counts"))
+
     def fit(self, X: jnp.ndarray,
             key: Union[None, int, jax.Array] = None) -> "KernelKMeans":
         """Fit on X (p, n); `key` may be a PRNGKey, an int seed, or None
         (seed 0). Returns self."""
         key = _as_key(key)
-        spec = ClusteringSpec(
-            kernel=self.kernel, kernel_params=dict(self.kernel_params),
-            k=self.k, r=self.r, backend=self.backend,
-            backend_params=_spec_safe(self.backend_params),
-            block=self.block, n_restarts=self.n_restarts,
-            max_iter=self.max_iter, n=int(X.shape[1]), p=int(X.shape[0]))
-        kern = _cached_kernel(spec.kernel,
-                              tuple(sorted(spec.kernel_params.items())))
+        spec = self._make_spec(n=X.shape[1], p=X.shape[0])
+        kern = self._kernel_fn()
         k_backend, k_km = jax.random.split(key)
         emb = be.get_backend(self.backend).fit(
             k_backend, kern, X, self.r, block=self.block,
             **self.backend_params)
         km = kmeans(k_km, emb.Y.T, self.k, n_restarts=self.n_restarts,
                     max_iter=self.max_iter)
-        state = emb.arrays
-        self.model_ = FittedModel(
-            spec=spec, X_train=jnp.asarray(X, jnp.float32),
-            U=emb.U, eigvals=emb.eigvals, centroids=km.centroids,
-            sketch_signs=state.get("sketch_signs"),
-            sketch_rows=state.get("sketch_rows"),
-            sketch_omega=state.get("sketch_omega"),
-            landmarks=emb.ref,
-            landmark_idx=state.get("landmark_idx"))
+        self.model_ = self._package(spec, X, emb.U, emb.eigvals,
+                                    km.centroids, emb.arrays, ref=emb.ref)
         self.labels_ = km.labels
         self.embedding_ = emb.Y
         self.eigvals_ = emb.eigvals
@@ -169,7 +186,124 @@ class KernelKMeans:
         self.inertia_ = float(km.objective)
         self.spec_ = spec
         self._extender = None
+        self._acc = None          # a fresh fit retires live stream state
+        self._k_km = k_km
         return self
+
+    # -- streaming fit ---------------------------------------------------
+
+    def partial_fit(self, X_chunk: jnp.ndarray,
+                    key: Union[None, int, jax.Array] = None, *,
+                    capacity: Optional[int] = None, reeig: bool = True,
+                    kmeans_mode: str = "full", minibatch_size: int = 256,
+                    minibatch_steps: int = 50) -> "KernelKMeans":
+        """Fold one data chunk (p, b) into a streaming fit. Returns self.
+
+        The first call fixes the RNG exactly as `fit` does (one split
+        into backend/K-means sub-keys), so a chunked pass over X is
+        bit-identical to `fit(X, key)` at the re-eig boundary — the test
+        matrix is sized to `capacity` up front (required on the first
+        call; `capacity=n` reproduces fit, larger leaves room to keep
+        streaming). When the estimator holds a model with streaming
+        state (a resumed artifact, an earlier fit/partial_fit), `key`
+        seeds only the K-means step and accumulation resumes from the
+        persisted sketch slab.
+
+        reeig=False accumulates without refreshing the model — the cheap
+        steady-state path; any later call with reeig=True (or
+        `reeig_now()`) folds the staged tail in and re-eigs.
+        kmeans_mode: "full" (restarted Lloyd, the fit-parity path) or
+        "minibatch" (Sculley updates in r-space for huge n —
+        repro.stream.minibatch).
+        """
+        X_chunk = jnp.asarray(X_chunk, jnp.float32)
+        if self._acc is None:
+            sketch_type = self.backend.split("-", 1)[1] \
+                if self.backend.startswith("onepass-") else None
+            if sketch_type is None:
+                raise ValueError(
+                    f"partial_fit needs a one-pass backend (streaming "
+                    f"sketch state); backend is {self.backend!r}")
+            from repro.stream.accumulate import SketchAccumulator
+            k_backend, self._k_km = jax.random.split(_as_key(key))
+            fwht_fn = self.backend_params.get("fwht_fn")
+            if self.model_ is not None \
+                    and self.model_.stream_counts is not None:
+                self._acc = SketchAccumulator.from_model(self.model_,
+                                                         fwht_fn=fwht_fn)
+            else:
+                if capacity is None:
+                    raise ValueError(
+                        "partial_fit needs capacity=<total columns> on "
+                        "the first call — the sketch test matrix is "
+                        "sized up front (capacity=n reproduces fit; "
+                        "larger keeps room to stream). Alternatively "
+                        "load a model with streaming state to resume.")
+                self._acc = SketchAccumulator(
+                    k_backend, self._kernel_fn(), capacity, self.r,
+                    oversampling=int(self.backend_params.get(
+                        "oversampling", 10)),
+                    block=self.block, sketch_type=sketch_type,
+                    fwht_fn=fwht_fn,
+                    truncate_basis=bool(self.backend_params.get(
+                        "truncate_basis", False)))
+        self._acc.add(X_chunk)
+        if reeig:
+            self.reeig_now(kmeans_mode=kmeans_mode,
+                           minibatch_size=minibatch_size,
+                           minibatch_steps=minibatch_steps)
+        return self
+
+    def reeig_now(self, kmeans_mode: str = "full",
+                  minibatch_size: int = 256,
+                  minibatch_steps: int = 50) -> "KernelKMeans":
+        """Re-eig the accumulated sketch and refresh model_/centroids.
+
+        Runs `one_pass_core` on the effective sketch (staged tail
+        included, applied on a copy — the canonical chunk-invariant
+        state is untouched) and re-clusters the fresh embedding."""
+        if self._acc is None:
+            raise RuntimeError("no streaming state; call partial_fit()")
+        eig = self._acc.eig()
+        if kmeans_mode == "full":
+            km = kmeans(self._k_km, eig.Y.T, self.k,
+                        n_restarts=self.n_restarts, max_iter=self.max_iter)
+            labels, centroids, objective = (km.labels, km.centroids,
+                                            km.objective)
+        elif kmeans_mode == "minibatch":
+            from repro.stream.minibatch import minibatch_kmeans
+            mb = minibatch_kmeans(self._k_km, eig.Y.T, self.k,
+                                  minibatch_size, minibatch_steps)
+            labels, centroids, objective = (mb.labels, mb.centroids,
+                                            mb.objective)
+        else:
+            raise ValueError(f"unknown kmeans_mode {kmeans_mode!r}; "
+                             f"have 'full' | 'minibatch'")
+        X_all = self._acc.X_all
+        spec = self._make_spec(n=self._acc.n_added, p=X_all.shape[0])
+        self.model_ = self._package(spec, X_all, eig.U, eig.eigvals,
+                                    centroids, self._acc.state_arrays())
+        self.labels_ = labels
+        self.embedding_ = eig.Y
+        self.eigvals_ = eig.eigvals
+        self.centroids_ = centroids
+        self.inertia_ = float(objective)
+        self.spec_ = spec
+        self._extender = None
+        return self
+
+    @property
+    def stream_progress(self) -> Dict:
+        """Streaming fit counters: columns added/applied/pending,
+        capacity, re-eigs run, and the last free approx-error estimate."""
+        if self._acc is None:
+            return {}
+        return {"n_added": self._acc.n_added,
+                "n_applied": self._acc.n_applied,
+                "n_pending": self._acc.n_pending,
+                "capacity": self._acc.capacity,
+                "reeigs": self._acc.reeigs,
+                "approx_err_estimate": self._acc.last_approx_err}
 
     def fit_predict(self, X: jnp.ndarray,
                     key: Union[None, int, jax.Array] = None) -> np.ndarray:

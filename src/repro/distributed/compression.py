@@ -111,7 +111,7 @@ def compression_ratio(params_like, r_prime: int) -> float:
 # artifact layer (serve/artifact.py save_model(dtype="bf16")) persists
 # uint16 and records which leaves are encoded; decode restores float32.
 
-_QUANTIZED_DTYPES = ("bf16",)
+_QUANTIZED_DTYPES = ("bf16", "int8")
 
 
 def bf16_encode(x: jnp.ndarray) -> jnp.ndarray:
@@ -127,14 +127,36 @@ def bf16_decode(u: jnp.ndarray) -> jnp.ndarray:
     return b.astype(jnp.float32)
 
 
+def int8_encode(x: jnp.ndarray) -> Tuple[jnp.ndarray, float]:
+    """float array -> (int8 array, per-leaf scale), symmetric absmax.
+
+    scale = max|x| / 127, so decode is q * scale — one float of metadata
+    per leaf, carried in the artifact's quantized map (JSON), not as a
+    side array. A quarter of the f32 bytes; ~2 decimal digits, enough
+    for the retrain loop's frequently-republished serving artifacts."""
+    x = jnp.asarray(x, jnp.float32)
+    amax = float(jnp.max(jnp.abs(x))) if x.size else 0.0
+    scale = amax / 127.0 if amax > 0.0 else 1.0
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decode(q: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """Invert int8_encode -> float32."""
+    return jnp.asarray(q, jnp.float32) * jnp.float32(scale)
+
+
 def quantize_state(state: dict, dtype: str = "bf16"
                    ) -> Tuple[dict, dict]:
     """Encode every floating leaf of a flat array dict for storage.
 
-    Returns (encoded_state, quantized) where `quantized` maps the leaf
-    names that were encoded to the codec name — integer leaves (sketch
-    row indices, landmark indices) pass through untouched and do not
-    appear in the map. `dequantize_state` inverts it.
+    Returns (encoded_state, quantized) where `quantized` records, per
+    encoded leaf name, the codec — the bare string "bf16", or
+    {"codec": "int8", "scale": s} for the scaled int8 codec — in a
+    JSON-ready shape (serve/artifact.py persists it verbatim in
+    leaves.json). Integer leaves (sketch row indices, landmark indices,
+    stream counts) pass through untouched and do not appear in the map.
+    `dequantize_state` inverts it.
     """
     if dtype not in _QUANTIZED_DTYPES:
         raise ValueError(f"unknown quantized dtype {dtype!r}; "
@@ -142,20 +164,33 @@ def quantize_state(state: dict, dtype: str = "bf16"
     out, quantized = {}, {}
     for name, arr in state.items():
         if jnp.issubdtype(jnp.asarray(arr).dtype, jnp.floating):
-            out[name] = bf16_encode(arr)
-            quantized[name] = dtype
+            if dtype == "bf16":
+                out[name] = bf16_encode(arr)
+                quantized[name] = dtype
+            else:
+                q, scale = int8_encode(arr)
+                out[name] = q
+                quantized[name] = {"codec": "int8", "scale": scale}
         else:
             out[name] = arr
     return out, quantized
 
 
 def dequantize_state(state: dict, quantized: dict) -> dict:
-    """Invert `quantize_state`: decode the recorded leaves to float32."""
+    """Invert `quantize_state`: decode the recorded leaves to float32.
+
+    Accepts both quantized-map shapes: the legacy bare codec string
+    ("bf16") and the per-leaf dict ({"codec": "int8", "scale": s})."""
     out = dict(state)
-    for name, dtype in quantized.items():
-        if dtype not in _QUANTIZED_DTYPES:
+    for name, meta in quantized.items():
+        codec = meta if isinstance(meta, str) else meta.get("codec")
+        if codec not in _QUANTIZED_DTYPES:
             raise ValueError(f"leaf {name!r} encoded with unknown dtype "
-                             f"{dtype!r}; have {list(_QUANTIZED_DTYPES)}")
-        if name in out:
+                             f"{codec!r}; have {list(_QUANTIZED_DTYPES)}")
+        if name not in out:
+            continue
+        if codec == "bf16":
             out[name] = bf16_decode(out[name])
+        else:
+            out[name] = int8_decode(out[name], float(meta["scale"]))
     return out

@@ -28,10 +28,19 @@ onepass-gaussian | nystrom | exact):
      and the SwapReport's measured flip/warm numbers are printed,
   7. with --sharded, run the extension matmul mesh-sharded over all local
      devices (set XLA_FLAGS=--xla_force_host_platform_device_count=8 to
-     fake a CPU mesh) and verify it matches the single-device path.
+     fake a CPU mesh) and verify it matches the single-device path,
+  8. with --stream, run the streaming drift loop (repro.stream):
+     partial_fit on an initial distribution, drifted synthetic traffic
+     through AsyncBatcher trips the DriftMonitor (--drift-* thresholds),
+     RetrainWorker refits from the accumulated sketch, publishes and
+     warm-swaps — asserted: exactly one rollout, zero stranded futures,
+     post-swap accuracy on the drifted distribution beats the stale
+     model. `--bench stream` (in `all`) adds the partial_fit/re-eig/
+     detection-to-swap numbers to BENCH_serve.json.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_cluster --smoke --swap
+  PYTHONPATH=src python -m repro.launch.serve_cluster --smoke --stream
   PYTHONPATH=src python -m repro.launch.serve_cluster --smoke \
       --backend nystrom            # full stack on a Nystrom fit
   PYTHONPATH=src python -m repro.launch.serve_cluster --n 8000 --r 2 \
@@ -79,11 +88,29 @@ def main():
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--bench", default="all",
                     choices=["sync", "async", "fused", "swap", "backends",
-                             "all"],
+                             "stream", "all"],
                     help="which benchmark modes land in BENCH_serve.json")
     ap.add_argument("--swap", action="store_true",
                     help="exercise the model lifecycle: publish versions, "
                          "warm hot-swap under pending async traffic, GC")
+    ap.add_argument("--stream", action="store_true",
+                    help="run the streaming drift loop demo: partial_fit "
+                         "on an initial distribution, drifted async "
+                         "traffic trips the DriftMonitor, RetrainWorker "
+                         "refits from accumulated state, publishes and "
+                         "warm-swaps — exactly one rollout, zero "
+                         "stranded futures (asserted)")
+    ap.add_argument("--drift-chi2", type=float, default=30.0,
+                    help="assignment-shift chi-square trigger threshold")
+    ap.add_argument("--drift-frac-delta", type=float, default=0.25,
+                    help="max cluster-population fraction delta trigger")
+    ap.add_argument("--drift-min-queries", type=int, default=64,
+                    help="assignment trigger stays quiet below this "
+                         "window size")
+    ap.add_argument("--drift-approx-threshold", type=float, default=None,
+                    help="p95 kernel-approximation-error trigger "
+                         "(default: disabled — exact-rank kernels keep "
+                         "residuals ~0 under any shift)")
     ap.add_argument("--gc-keep", type=int, default=None,
                     help="VersionStore retention for --swap: keep the "
                          "last K published versions")
@@ -256,6 +283,91 @@ def main():
               f"{report.drained_requests} pending requests into the old "
               f"model; p95 before {report.p95_before_ms:.2f} ms")
 
+    # Check 5 (--stream): the living-service loop — partial_fit on an
+    # initial distribution, drifted async traffic trips the DriftMonitor,
+    # RetrainWorker refits from the accumulated sketch, publishes to the
+    # VersionStore and warm-swaps the registry row. Gated: exactly one
+    # rollout, zero stranded futures, post-swap accuracy on the drifted
+    # distribution beats the stale model.
+    if args.stream:
+        from repro.core.metrics import clustering_accuracy
+        from repro.serve import VersionStore
+        from repro.stream import DriftMonitor, RetrainWorker
+
+        rng_s = np.random.RandomState(args.seed)
+
+        def blobs_1d(xs, n_per=100):
+            cols, labs = [], []
+            for i, x0 in enumerate(xs):
+                c = np.zeros((2, n_per), np.float32)
+                c[0] = x0 + 0.25 * rng_s.randn(n_per)
+                c[1] = 0.25 * rng_s.randn(n_per)
+                cols.append(c)
+                labs.append(np.full(n_per, i))
+            return np.concatenate(cols, axis=1), np.concatenate(labs)
+
+        X0, _ = blobs_1d((-2.0, 2.0))              # initial distribution
+        Xd, yd = blobs_1d((3.0, 8.0))              # drifted distribution
+        stream_backend = (backend if backend.startswith("onepass-")
+                          else "onepass-srht")
+        s_est = KernelKMeans(k=2, r=2, kernel="linear",
+                             backend=stream_backend, block=64)
+        s_est.partial_fit(X0, key=jax.random.fold_in(key, 7),
+                          capacity=X0.shape[1] + Xd.shape[1])
+        stale_acc = clustering_accuracy(yd, s_est.predict(Xd), 2)
+        s_store = VersionStore(args.artifact_dir + "_stream_versions",
+                               keep=args.gc_keep or 4)
+        DEFAULT_REGISTRY.register("stream-demo", s_est.model_,
+                                  overwrite=True,
+                                  version=s_store.publish(s_est.model_))
+        s_sched = DEFAULT_REGISTRY.scheduler(
+            "stream-demo", max_wait_ms=args.max_wait_ms)
+        mon = DriftMonitor(
+            s_est.model_, ref_labels=s_est.labels_,
+            approx_err_threshold=args.drift_approx_threshold,
+            chi2_threshold=args.drift_chi2,
+            frac_delta_threshold=args.drift_frac_delta,
+            min_queries=args.drift_min_queries)
+        worker = RetrainWorker(
+            "stream-demo", DEFAULT_REGISTRY, s_store, mon,
+            lambda rep: s_est.partial_fit(Xd).model_)
+
+        # Healthy (shuffled) traffic first: the monitor must stay quiet.
+        Xh = X0[:, rng_s.permutation(X0.shape[1])]
+        chunks = [Xh[:, lo:lo + 20] for lo in range(0, 100, 20)]
+        futs = [s_sched.submit(ch) for ch in chunks]
+        s_sched.flush()
+        for ch, f in zip(chunks, futs):
+            mon.observe(ch, f.result()[0])
+        assert worker.step() is None, \
+            "drift monitor fired on in-distribution traffic"
+
+        # Drifted traffic through the async front door; one request left
+        # pending so the swap's drain path is exercised.
+        chunks = [Xd[:, lo:lo + 20] for lo in range(0, Xd.shape[1], 20)]
+        futs = [s_sched.submit(ch) for ch in chunks]
+        s_sched.flush()
+        for ch, f in zip(chunks, futs):
+            mon.observe(ch, f.result()[0])
+        pending = s_sched.submit(Xd[:, :8])
+        rollout = worker.step()
+        assert rollout is not None, "injected drift did not trigger"
+        assert worker.step() is None and worker.retrains == 1, \
+            "drift must trigger exactly one refit+swap"
+        stranded = sum(not f.done() for f in futs + [pending])
+        assert stranded == 0, f"{stranded} futures stranded by the swap"
+        new_acc = clustering_accuracy(
+            yd, KernelKMeans.from_model(
+                DEFAULT_REGISTRY.get("stream-demo")).predict(Xd), 2)
+        assert new_acc > stale_acc, \
+            f"refit did not beat the stale model ({new_acc} vs {stale_acc})"
+        print(f"stream: drift {rollout.drift.reason}; refit v"
+              f"{rollout.version} detect->swap "
+              f"{rollout.detect_to_swap_s:.3f} s (refit "
+              f"{rollout.refit_s:.3f} s), drained "
+              f"{rollout.swap.drained_requests} pending, stranded 0; "
+              f"drifted-set accuracy {stale_acc:.2f} -> {new_acc:.2f}")
+
     # Optional: the mesh-sharded extension path against the local mesh.
     mesh = None
     if args.sharded:
@@ -277,7 +389,7 @@ def main():
     batch_sizes = [int(b) for b in args.batch_sizes.split(",") if b.strip()]
     if not batch_sizes:
         ap.error(f"--batch-sizes {args.batch_sizes!r} parses to nothing")
-    modes = (("sync", "async", "fused", "swap", "backends")
+    modes = (("sync", "async", "fused", "swap", "backends", "stream")
              if args.bench == "all" else (args.bench,))
     embed_fused = {"auto": None, "on": True, "off": False}[args.fused_embed]
     from repro.serve import median_benches

@@ -75,11 +75,20 @@ class MicroBatcher:
         self.stats: Dict = {}
         self.reset_stats()
 
-    def reset_stats(self) -> None:
-        """Zero the traffic counters (bucket_hits included — this also
-        resets the `executables` view, NOT the jit cache itself)."""
+    def reset_stats(self, preserve_buckets: bool = False) -> None:
+        """Zero the traffic counters.
+
+        preserve_buckets=False also drops bucket_hits — and with it the
+        `executables` view that a warm hot-swap (registry.swap) replays
+        into the incoming row. Periodic stats sampling (e.g. the drift
+        monitor's sample_serving_stats) must pass preserve_buckets=True:
+        the hit COUNTS reset to zero but every bucket key survives, so a
+        sample between swaps can never cold-start the next swap. Neither
+        form touches the jit cache itself."""
+        hits = ({b: 0 for b in self.stats.get("bucket_hits", {})}
+                if preserve_buckets else {})
         self.stats = {"queries": 0, "padded_queries": 0,
-                      "batches": 0, "bucket_hits": {}}
+                      "batches": 0, "bucket_hits": hits}
 
     # -- bucketed one-shot path ------------------------------------------
 

@@ -22,6 +22,11 @@ Six modes, all landing in BENCH_serve.json:
            unified KernelKMeans front door on the same data; accuracy,
            streaming kernel-approx error, fit wall/memory, artifact
            bytes, and bucketed serving throughput per backend;
+  stream   `benchmark_stream` — the streaming-fit path (repro.stream):
+           partial_fit accumulation throughput (chunks/sec, cols/sec),
+           the re-eig cadence cost, and the detection-to-swap latency of
+           one full drift rollout (trigger -> refit -> publish -> warm
+           swap) against a real VersionStore + ModelRegistry;
   sharded  sync/async with mesh= set — the extension matmul runs through
            serve.extend.ShardedExtender on the given mesh.
 
@@ -45,7 +50,12 @@ Schema (write_bench):
      "backends": {"per_backend": {"onepass-srht": {"accuracy": ...,
                   "kernel_approx_error": ..., "fit_s": ...,
                   "fit_memory_bytes": ..., "artifact_bytes": ...,
-                  "n_ref": ..., "assignments_per_sec": ...}, ...}}}
+                  "n_ref": ..., "assignments_per_sec": ...}, ...}},
+     "stream": {"partial_fit_chunks_per_sec": ...,
+                "partial_fit_cols_per_sec": ..., "reeig_s": ...,
+                "rollout": {"detect_to_swap_s": ..., "refit_s": ...,
+                            "publish_s": ..., "swap_s": ...,
+                            "stranded_futures": 0, "retrains": 1}}}
 """
 from __future__ import annotations
 
@@ -498,6 +508,139 @@ def _key_bits(key) -> tuple:
     return tuple(np.asarray(arr).ravel().tolist())
 
 
+def benchmark_stream(model: FittedModel, n_chunks: int = 8,
+                     chunk_cols: int = 128, repeats: int = 3,
+                     key: Optional[jax.Array] = None,
+                     block: Optional[int] = None,
+                     max_wait_ms: float = 2.0) -> Dict:
+    """The streaming-fit path (repro.stream) as bench numbers.
+
+    Three read-outs:
+
+      partial_fit_*_per_sec  accumulation throughput: chunks folded with
+                             reeig=False (the steady-state ingest path) —
+                             best pass of `repeats`, each on a fresh
+                             accumulator so every pass pays the same
+                             per-block kernel-stripe work;
+      reeig_s                re-eig cadence cost at full capacity
+                             (one_pass_core + full K-means re-cluster),
+                             best of `repeats` after a warmup call;
+      rollout                detection-to-swap latency of one REAL drift
+                             rollout — drifted async traffic observed by
+                             a DriftMonitor, RetrainWorker.step() doing
+                             refit -> VersionStore.publish -> warm
+                             registry.swap — with the zero-stranded-
+                             futures invariant re-checked. Wall numbers
+                             here include a full refit, so the gate
+                             treats detect_to_swap_s as info-only.
+
+    The accumulation/re-eig section streams random data through the
+    passed model's spec (coerced to a one-pass backend — streaming needs
+    sketch state); the rollout is a self-contained 1-d drift demo, so the
+    numbers are comparable across --backend choices.
+    """
+    import tempfile
+
+    from repro.api import KernelKMeans
+    from repro.serve.versions import VersionStore
+    from repro.stream import DriftMonitor, RetrainWorker
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    spec = model.spec
+    backend = (spec.backend if spec.backend.startswith("onepass-")
+               else "onepass-srht")
+    blk = min(block or spec.block, chunk_cols)
+    capacity = int(n_chunks) * int(chunk_cols)
+    X = jax.random.normal(key, (spec.p, capacity), jnp.float32)
+
+    def one_pass():
+        est = KernelKMeans(k=spec.k, r=spec.r, kernel=spec.kernel,
+                           kernel_params=spec.kernel_params,
+                           backend=backend, block=blk)
+        est.partial_fit(X[:, :chunk_cols], key=key, capacity=capacity,
+                        reeig=False)               # warmup chunk
+        t0 = time.perf_counter()
+        for i in range(1, n_chunks):
+            est.partial_fit(X[:, i * chunk_cols:(i + 1) * chunk_cols],
+                            reeig=False)
+        jax.block_until_ready(est._acc.W)
+        return time.perf_counter() - t0, est
+
+    walls = []
+    for _ in range(max(int(repeats), 1)):
+        wall, est = one_pass()
+        walls.append(wall)
+    accum_best = min(walls)
+
+    est.reeig_now()                                # compile / warmup
+    reeig_times = []
+    for _ in range(max(int(repeats), 1)):
+        t0 = time.perf_counter()
+        est.reeig_now()
+        jax.block_until_ready(est.centroids_)
+        reeig_times.append(time.perf_counter() - t0)
+
+    # One full drift rollout against a real store + registry.
+    rng = np.random.RandomState(0)
+
+    def blobs(xs, n_per=80):
+        cols = []
+        for x0 in xs:
+            c = np.zeros((2, n_per), np.float32)
+            c[0] = x0 + 0.25 * rng.randn(n_per)
+            c[1] = 0.25 * rng.randn(n_per)
+            cols.append(c)
+        return np.concatenate(cols, axis=1)
+
+    X0, Xd = blobs((-2.0, 2.0)), blobs((3.0, 8.0))
+    demo = KernelKMeans(k=2, r=2, kernel="linear",
+                        backend="onepass-srht", block=64)
+    demo.partial_fit(X0, key=key, capacity=X0.shape[1] + Xd.shape[1])
+    with tempfile.TemporaryDirectory() as tmp:
+        store = VersionStore(tmp, keep=2)
+        reg = ModelRegistry()
+        reg.register("stream-bench", demo.model_,
+                     version=store.publish(demo.model_))
+        sched = reg.scheduler("stream-bench", max_wait_ms=max_wait_ms)
+        mon = DriftMonitor(demo.model_, ref_labels=demo.labels_,
+                           min_queries=64)
+        worker = RetrainWorker("stream-bench", reg, store, mon,
+                               lambda rep: demo.partial_fit(Xd).model_)
+        chunks = [Xd[:, i * 20:(i + 1) * 20] for i in range(8)]
+        futures = [sched.submit(ch) for ch in chunks]
+        sched.flush()
+        for ch, fut in zip(chunks, futures):
+            mon.observe(ch, fut.result()[0])
+        pending = sched.submit(Xd[:, :8])          # drained by the swap
+        rollout = worker.step()
+        assert rollout is not None, "drift rollout did not fire"
+        stranded = sum(not f.done() for f in futures + [pending])
+        reg.unregister("stream-bench")             # retire the new pump
+
+    return {
+        "mode": "stream",
+        "stream_backend": backend,
+        "chunk_cols": int(chunk_cols),
+        "n_chunks": int(n_chunks),
+        "capacity": capacity,
+        "block": int(blk),
+        "partial_fit_chunks_per_sec": (n_chunks - 1) / accum_best,
+        "partial_fit_cols_per_sec":
+            (n_chunks - 1) * chunk_cols / accum_best,
+        "reeig_s": min(reeig_times),
+        "rollout": {
+            "detect_to_swap_s": float(rollout.detect_to_swap_s),
+            "refit_s": float(rollout.refit_s),
+            "publish_s": float(rollout.publish_s),
+            "swap_s": float(rollout.swap_s),
+            "drift_chi2": float(rollout.drift.chi2),
+            "drained_requests": int(rollout.swap.drained_requests),
+            "stranded_futures": int(stranded),
+            "retrains": int(worker.retrains),
+        },
+    }
+
+
 def machine_calibration() -> Dict:
     """Machine-speed probe: best-call time of a fixed jitted matmul.
 
@@ -571,6 +714,12 @@ def run_benches(model: FittedModel, modes: Sequence[str] = ("sync", "async"),
             max_wait_ms=max_wait_ms, slo_ms=slo_ms, key=key, block=block,
             fused=fused, embed_fused=embed_fused, interpret=interpret,
             max_bucket=max_bucket)
+    if "stream" in modes:
+        # Single-device by construction: the streaming accumulate/re-eig
+        # path and the drift rollout are fit-side, not extension-side.
+        bench["stream"] = benchmark_stream(
+            model, repeats=repeats, key=key, block=block,
+            max_wait_ms=max_wait_ms)
     if "backends" in modes:
         if data is None:
             bench["backends"] = {"skipped": "no (X, labels) data passed"}
@@ -645,6 +794,19 @@ def format_bench(bench: Dict) -> str:
                 f"{row['fit_memory_bytes'] / 1e6:8.2f} MB  "
                 f"serve {row['assignments_per_sec']:>10.0f} q/s "
                 f"(n_ref {row['n_ref']})")
+    if "stream" in bench:
+        st = bench["stream"]
+        ro = st["rollout"]
+        lines.append(
+            f"stream: partial_fit {st['partial_fit_cols_per_sec']:>10.0f} "
+            f"cols/sec ({st['partial_fit_chunks_per_sec']:.1f} chunks/sec "
+            f"@ {st['chunk_cols']} cols)  re-eig {st['reeig_s'] * 1e3:.1f}"
+            f" ms @ n={st['capacity']}")
+        lines.append(
+            f"  drift rollout: detect->swap {ro['detect_to_swap_s']:.3f} s"
+            f" (refit {ro['refit_s']:.3f} s, publish {ro['publish_s']:.3f}"
+            f" s, swap {ro['swap_s']:.3f} s)  stranded futures "
+            f"{ro['stranded_futures']}")
     if "fused" in bench:
         f = bench["fused"]
         hbm = f["hbm"]

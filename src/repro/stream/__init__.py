@@ -1,0 +1,28 @@
+"""repro.stream: fit as a living service.
+
+Four layers over the one-pass sketch (see ROADMAP / ISSUE 6):
+
+    accumulate  SketchAccumulator — exact incremental W = K Omega
+                accumulation per data chunk; the engine under both
+                one-shot `fit` and `KernelKMeans.partial_fit`
+    minibatch   Sculley-style minibatch K-means in the rank-r embedding
+                space, for re-eigs at huge n
+    drift       DriftMonitor — streaming kernel-approximation-error and
+                assignment-shift estimators over sampled live traffic
+    retrain     RetrainWorker — drift trigger -> refit from accumulated
+                state -> VersionStore.publish -> ModelRegistry.swap
+"""
+from repro.stream.accumulate import SketchAccumulator
+from repro.stream.minibatch import MiniBatchResult, minibatch_kmeans
+from repro.stream.drift import DriftMonitor, DriftReport
+from repro.stream.retrain import RetrainReport, RetrainWorker
+
+__all__ = [
+    "DriftMonitor",
+    "DriftReport",
+    "MiniBatchResult",
+    "RetrainReport",
+    "RetrainWorker",
+    "SketchAccumulator",
+    "minibatch_kmeans",
+]

@@ -1,0 +1,303 @@
+"""Incremental one-pass sketch accumulation: fit as a stream of chunks.
+
+The paper's sketch W = K Omega is a sum over entries of K, so it admits
+exact incremental accumulation: when a new block of data points C arrives
+after q applied points, the only kernel values that exist beyond the
+already-applied principal block are the symmetric border
+
+    Kc = kappa([X_applied | C], C)          (q + b, b)
+
+and the sketch update splits along it:
+
+    W[q:q+b]  = (Omega^T pad(Kc)).T         new rows, one FWHT over the
+                                            zero-padded border columns
+    W[:q]    += Kc[:q] @ Omega[q:q+b]       symmetric cross-term into the
+                                            old rows, via the materialized
+                                            Omega row slice (srht_rows)
+
+Row norms of K accumulate the same way, giving a streaming estimate of
+||K||_F^2 (and hence of the approximation error) for free.
+
+Chunk-size invariance — the contract `KernelKMeans.partial_fit` builds
+on — comes from BLOCK-GRANULAR STAGING: `add()` buffers incoming columns
+and applies updates only in exact `block`-wide slices; the ragged tail is
+applied on a COPY at `eig()` time, so the canonical update sequence never
+depends on how callers chunked their data. One-shot `fit` routes through
+this same accumulator (repro.api.backends), so a chunked partial_fit
+over a full pass is bit-identical to fit at the re-eig boundary.
+
+The sketch is built at a fixed `capacity` (SRHT pads to the next power of
+two of the capacity, not of the data seen so far), so the test matrix —
+and therefore the fit — is a pure function of (key, capacity) no matter
+when data arrives.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels_fn import KernelFn
+from repro.core.sketch import (GaussianSketch, LowRankEig, SRHT,
+                               make_gaussian, make_srht, one_pass_core,
+                               srht_apply_t, srht_rows)
+
+Sketch = Union[SRHT, GaussianSketch]
+
+
+class SketchAccumulator:
+    """Streaming accumulation of the one-pass sketch state.
+
+    key:         PRNGKey the test matrix is drawn from (same key +
+                 capacity => same sketch, whatever the chunking)
+    kernel:      KernelFn kappa(X, Z)
+    capacity:    maximum total columns this accumulator will ever hold;
+                 the SRHT/Gaussian test matrix is sized to it up front
+    r:           target rank of `eig()`
+    oversampling/block/sketch_type/fwht_fn/truncate_basis: exactly the
+                 one-pass backend knobs (repro.api.backends)
+
+    add(X_chunk) stages columns and applies full-block updates;
+    eig() applies the staged tail on a copy and runs Alg. 1 lines 3-6
+    on the effective sketch; state_arrays() exports the persistable
+    state (FittedModel stream_* leaves) and from_model() resumes from it.
+    """
+
+    def __init__(self, key: jax.Array, kernel: KernelFn, capacity: int,
+                 r: int, *, oversampling: int = 10, block: int = 512,
+                 sketch_type: str = "srht",
+                 fwht_fn: Optional[Callable] = None,
+                 truncate_basis: bool = False):
+        capacity = int(capacity)
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        r_prime = int(r) + int(oversampling)
+        if sketch_type == "srht":
+            sketch: Sketch = make_srht(key, capacity, r_prime)
+        elif sketch_type == "gaussian":
+            sketch = make_gaussian(key, capacity, r_prime)
+        else:
+            raise ValueError(f"unknown sketch_type {sketch_type!r}")
+        self._bind(kernel, int(r), sketch,
+                   jnp.zeros((capacity, r_prime), jnp.float32),
+                   jnp.zeros((capacity,), jnp.float32), 0, None,
+                   block=block, truncate_basis=truncate_basis,
+                   fwht_fn=fwht_fn)
+
+    def _bind(self, kernel, r, sketch, W, row_norms2, n_applied, X, *,
+              block, truncate_basis, fwht_fn) -> None:
+        self.kernel = kernel
+        self.r = int(r)
+        self.sketch = sketch
+        self.W = W
+        self.row_norms2 = row_norms2
+        self.n_applied = int(n_applied)
+        self._X = X
+        self.block = int(block)
+        self.truncate_basis = bool(truncate_basis)
+        self.fwht_fn = fwht_fn
+        self.reeigs = 0
+        self.last_fro2 = 0.0
+        self.last_approx_err = 0.0
+
+    # -- resume ----------------------------------------------------------
+
+    @classmethod
+    def from_arrays(cls, kernel: KernelFn, r: int, sketch: Sketch,
+                    W: jnp.ndarray, row_norms2: jnp.ndarray,
+                    n_applied: int, X: Optional[jnp.ndarray], *,
+                    block: int = 512, truncate_basis: bool = False,
+                    fwht_fn: Optional[Callable] = None
+                    ) -> "SketchAccumulator":
+        """Rebuild an accumulator around existing state (see from_model)."""
+        acc = cls.__new__(cls)
+        acc._bind(kernel, r, sketch, jnp.asarray(W, jnp.float32),
+                  jnp.asarray(row_norms2, jnp.float32), n_applied,
+                  None if X is None else jnp.asarray(X, jnp.float32),
+                  block=block, truncate_basis=truncate_basis,
+                  fwht_fn=fwht_fn)
+        if acc.n_added < acc.n_applied or acc.n_added > acc.capacity:
+            raise ValueError(
+                f"inconsistent stream state: {acc.n_added} columns of data "
+                f"for n_applied={acc.n_applied}, capacity={acc.capacity}")
+        return acc
+
+    @classmethod
+    def from_model(cls, model, *, fwht_fn: Optional[Callable] = None
+                   ) -> "SketchAccumulator":
+        """Resume accumulation from a (possibly published) FittedModel.
+
+        The artifact's stream_* leaves carry the applied sketch state;
+        columns of X_train past stream_counts[0] are the staged tail and
+        re-enter the pending buffer, so resume-then-eig reproduces the
+        pre-publish eig exactly.
+        """
+        spec = model.spec
+        if getattr(model, "stream_counts", None) is None:
+            raise ValueError(
+                "model carries no streaming state (stream_counts is "
+                "missing): only one-pass fits made through "
+                "SketchAccumulator can resume partial_fit")
+        sketch_type = spec.sketch_type
+        if sketch_type == "srht":
+            sketch: Sketch = SRHT(signs=model.sketch_signs,
+                                  rows=model.sketch_rows,
+                                  n=int(model.stream_counts[1]),
+                                  n_pad=int(model.sketch_signs.shape[0]))
+        elif sketch_type == "gaussian":
+            sketch = GaussianSketch(omega=model.sketch_omega)
+        else:
+            raise ValueError(
+                f"backend {spec.backend!r} has no streaming sketch state")
+        return cls.from_arrays(
+            model.kernel_fn(), spec.r, sketch, model.stream_w,
+            model.stream_row_norms2, int(model.stream_counts[0]),
+            model.X_train, block=spec.block,
+            truncate_basis=bool(
+                spec.backend_params.get("truncate_basis", False)),
+            fwht_fn=fwht_fn)
+
+    # -- views -----------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return (self.sketch.n if isinstance(self.sketch, SRHT)
+                else int(self.sketch.omega.shape[0]))
+
+    @property
+    def r_prime(self) -> int:
+        return int(self.W.shape[1])
+
+    @property
+    def n_added(self) -> int:
+        """Total columns added (applied + staged)."""
+        return 0 if self._X is None else int(self._X.shape[1])
+
+    @property
+    def n_pending(self) -> int:
+        """Staged columns not yet folded into the canonical W."""
+        return self.n_added - self.n_applied
+
+    @property
+    def X_all(self) -> jnp.ndarray:
+        """All columns added so far, (p, n_added) — the model's X_train."""
+        if self._X is None:
+            raise RuntimeError("no data accumulated; call add() first")
+        return self._X
+
+    # -- accumulation ----------------------------------------------------
+
+    def add(self, X_chunk: jnp.ndarray) -> "SketchAccumulator":
+        """Fold one data chunk (p, b) in; applies any full blocks now."""
+        X_chunk = jnp.asarray(X_chunk, jnp.float32)
+        if X_chunk.ndim != 2 or X_chunk.shape[1] < 1:
+            raise ValueError(f"chunk must be (p, b>=1), got "
+                             f"{getattr(X_chunk, 'shape', None)}")
+        if self._X is not None and X_chunk.shape[0] != self._X.shape[0]:
+            raise ValueError(f"chunk has p={X_chunk.shape[0]}, accumulator "
+                             f"holds p={self._X.shape[0]}")
+        if self.n_added + int(X_chunk.shape[1]) > self.capacity:
+            raise ValueError(
+                f"capacity {self.capacity} exceeded: have {self.n_added} "
+                f"columns, chunk adds {int(X_chunk.shape[1])}")
+        self._X = (X_chunk if self._X is None
+                   else jnp.concatenate([self._X, X_chunk], axis=1))
+        while self.n_added - self.n_applied >= self.block:
+            self.W, self.row_norms2 = self._apply(
+                self.W, self.row_norms2, self.n_applied, self.block)
+            self.n_applied += self.block
+        return self
+
+    def _apply(self, W, row_norms2, q, b):
+        """One canonical block update: fold columns [q, q+b) of the data
+        into (W, row_norms2); pure — returns the updated pair."""
+        C = self._X[:, q:q + b]
+        Kc = self.kernel(self._X[:, :q + b], C)            # (q+b, b)
+        if isinstance(self.sketch, SRHT):
+            Kp = jnp.zeros((self.capacity, b),
+                           jnp.float32).at[:q + b].set(Kc)
+            new_rows = srht_apply_t(self.sketch, Kp, self.fwht_fn).T
+            cross = srht_rows(self.sketch, q, q + b)
+        else:
+            new_rows = Kc.T @ self.sketch.omega[:q + b]
+            cross = self.sketch.omega[q:q + b]
+        W = W.at[q:q + b].set(new_rows)
+        row_norms2 = row_norms2.at[q:q + b].set(jnp.sum(Kc * Kc, axis=0))
+        if q:
+            W = W.at[:q].add(Kc[:q] @ cross)
+            row_norms2 = row_norms2.at[:q].add(
+                jnp.sum(Kc[:q] * Kc[:q], axis=1))
+        return W, row_norms2
+
+    def _effective_state(self):
+        """(W, row_norms2, n_eff) with the staged tail applied on a COPY
+        — the canonical block alignment is never disturbed, so later
+        adds keep the chunk-invariant update sequence."""
+        tail = self.n_added - self.n_applied
+        if tail == 0:
+            return self.W, self.row_norms2, self.n_applied
+        W, rn = self._apply(self.W, self.row_norms2, self.n_applied, tail)
+        return W, rn, self.n_added
+
+    # -- eigendecomposition ----------------------------------------------
+
+    def eig(self, r: Optional[int] = None) -> LowRankEig:
+        """Alg. 1 lines 3-6 on the effective sketch (tail included).
+
+        Also refreshes `last_fro2` (exact streaming ||K||_F^2) and
+        `last_approx_err` (sqrt(1 - sum(eigvals^2) / ||K||_F^2), the
+        free residual estimate the drift monitor thresholds on).
+        """
+        r = self.r if r is None else int(r)
+        W, rn, n_eff = self._effective_state()
+        if n_eff < 1:
+            raise RuntimeError("no data accumulated; call add() first")
+        Wn = W[:n_eff]
+        if self.truncate_basis:
+            U, S, Vt = jnp.linalg.svd(Wn, full_matrices=False)
+            Wn = (U[:, :r] * S[None, :r]) @ Vt[:r]
+        if isinstance(self.sketch, SRHT):
+            if n_eff == self.capacity:
+                omega_t_q = lambda Q: srht_apply_t(self.sketch, Q,
+                                                   self.fwht_fn)
+            else:
+                def omega_t_q(Q):
+                    Qp = jnp.zeros((self.capacity, Q.shape[1]),
+                                   Q.dtype).at[:n_eff].set(Q)
+                    return srht_apply_t(self.sketch, Qp, self.fwht_fn)
+        else:
+            omega_t_q = lambda Q: self.sketch.omega[:n_eff].T @ Q
+        out = one_pass_core(Wn, omega_t_q, r)
+        fro2 = float(jnp.sum(rn))
+        tail2 = max(fro2 - float(jnp.sum(out.eigvals ** 2)), 0.0)
+        self.last_fro2 = fro2
+        self.last_approx_err = (tail2 / fro2) ** 0.5 if fro2 > 0 else 0.0
+        self.reeigs += 1
+        return out
+
+    # -- persistence -----------------------------------------------------
+
+    def state_arrays(self) -> Dict[str, jnp.ndarray]:
+        """The persistable stream state, keyed as FittedModel leaves.
+
+        Staged (pending) columns are NOT separate state: they are the
+        trailing columns of the model's X_train, recovered by
+        from_model() via stream_counts[0].
+        """
+        if isinstance(self.sketch, SRHT):
+            st = {"sketch_signs": self.sketch.signs,
+                  "sketch_rows": self.sketch.rows}
+        else:
+            st = {"sketch_omega": self.sketch.omega}
+        st["stream_w"] = self.W
+        st["stream_row_norms2"] = self.row_norms2
+        st["stream_counts"] = jnp.array([self.n_applied, self.capacity],
+                                        jnp.int32)
+        return st
+
+    def __repr__(self) -> str:
+        kind = ("srht" if isinstance(self.sketch, SRHT) else "gaussian")
+        return (f"SketchAccumulator({kind}, r={self.r}, "
+                f"r'={self.r_prime}, {self.n_added}/{self.capacity} cols, "
+                f"{self.n_pending} pending)")

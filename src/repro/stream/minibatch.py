@@ -1,0 +1,66 @@
+"""Minibatch K-means (Sculley 2010) in the rank-r embedding space.
+
+Chitta et al. ("Scalable Kernel Clustering", PAPERS.md) motivate
+approximating kernel K-means with cheap per-batch updates; here the
+kernel is already linearized (Y = Sigma^{1/2} U^T from the one-pass
+sketch), so the minibatch variant is plain Sculley minibatch K-means on
+the columns of Y: per step, sample a batch, assign to the nearest
+centroid, and move each centroid toward its batch mean with a
+per-centroid count-based learning rate cnt / (counts + cnt).
+
+This is the `kmeans_mode="minibatch"` path of
+`KernelKMeans.partial_fit` — an O(steps * batch * k * r) re-eig follow-up
+instead of full Lloyd's O(restarts * iters * n * k * r). Each re-eig
+re-seeds with k-means++ on the fresh embedding: the r-space basis
+rotates between re-eigs (Q is recomputed), so carrying centroids across
+bases would chase a moving frame.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import _sq_dists, kmeans_plus_plus
+
+
+class MiniBatchResult(NamedTuple):
+    labels: jnp.ndarray      # (n,) int32 — final full-data assignment
+    centroids: jnp.ndarray   # (K, r)
+    objective: jnp.ndarray   # () float32 — full-data sum of squared dists
+    n_steps: jnp.ndarray     # () int32
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def minibatch_kmeans(key: jax.Array, Y: jnp.ndarray, k: int,
+                     batch_size: int = 256,
+                     n_steps: int = 50) -> MiniBatchResult:
+    """Sculley minibatch K-means. Y: (n, r) rows = samples (matching
+    core.kmeans.kmeans); sampling is uniform with replacement."""
+    n = Y.shape[0]
+    k_init, k_loop = jax.random.split(key)
+    C0 = kmeans_plus_plus(k_init, Y, k)
+
+    def body(_, carry):
+        C, counts, key = carry
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (batch_size,), 0, n)
+        B = Y[idx]
+        labels = jnp.argmin(_sq_dists(B, C), axis=1)
+        onehot = jax.nn.one_hot(labels, k, dtype=Y.dtype)    # (b, K)
+        cnt = jnp.sum(onehot, axis=0)                        # (K,)
+        mean = (onehot.T @ B) / jnp.maximum(cnt, 1.0)[:, None]
+        new_counts = counts + cnt
+        lr = (cnt / jnp.maximum(new_counts, 1.0))[:, None]
+        C = jnp.where(cnt[:, None] > 0, C + lr * (mean - C), C)
+        return C, new_counts, key
+
+    init = (C0, jnp.zeros((k,), Y.dtype), k_loop)
+    C, _, _ = jax.lax.fori_loop(0, n_steps, body, init)
+    d2 = _sq_dists(Y, C)
+    labels = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    objective = jnp.sum(jnp.min(d2, axis=1))
+    return MiniBatchResult(labels=labels, centroids=C, objective=objective,
+                           n_steps=jnp.int32(n_steps))

@@ -309,7 +309,8 @@ def test_artifact_persists_leaf_names(model, tmp_path):
     path = pathlib.Path(save_model(model, str(tmp_path / "a")))
     names = json.loads((path / "leaves.json").read_text())["names"]
     assert set(names) == {"X_train", "U", "eigvals", "centroids",
-                          "sketch_signs", "sketch_rows"}
+                          "sketch_signs", "sketch_rows",
+                          "stream_w", "stream_row_norms2", "stream_counts"}
     loaded = load_model(str(path))
     np.testing.assert_array_equal(np.asarray(loaded.U),
                                   np.asarray(model.U))
