@@ -133,7 +133,8 @@ def default_nystrom_m(n: int, r: int) -> int:
 
 def _onepass(sketch_type: str):
     def fit(key, kernel, X, r, *, block=512, oversampling=10,
-            fwht_fn=None, truncate_basis=False, capacity=None) -> Embedding:
+            fwht_fn=None, truncate_basis=False, capacity=None,
+            policy=None, kernel_statics=None) -> Embedding:
         # One-shot fit is a single-chunk pass through the streaming
         # accumulator (repro.stream.accumulate) — the SAME block-granular
         # update sequence partial_fit replays, so a chunked fit over a
@@ -144,10 +145,15 @@ def _onepass(sketch_type: str):
         # adding columns after this fit. Lazy import: repro.stream's
         # retrain layer imports repro.api back.
         from repro.stream.accumulate import SketchAccumulator
+        # policy= (a serve.ComputePolicy) selects the fit compute path:
+        # mesh -> the sharded engine (distributed/fit.py), fit_fused ->
+        # the fit_sketch Pallas kernel; None is the canonical path.
         acc = SketchAccumulator(key, kernel, capacity or X.shape[1], r,
                                 oversampling=oversampling, block=block,
                                 sketch_type=sketch_type, fwht_fn=fwht_fn,
-                                truncate_basis=truncate_basis)
+                                truncate_basis=truncate_basis,
+                                policy=policy,
+                                kernel_statics=kernel_statics)
         acc.add(X)
         eig = acc.eig()
         return Embedding(Y=eig.Y, U=eig.U, eigvals=eig.eigvals,

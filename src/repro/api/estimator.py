@@ -84,7 +84,11 @@ class KernelKMeans:
     `repro.api.available_backends()`; `backend_params` its knobs
     (`oversampling` for one-pass, `m` for Nystrom — non-serializable
     values like `fwht_fn` are honoured at fit time but excluded from the
-    persisted spec).
+    persisted spec); `policy` an optional `serve.ComputePolicy` choosing
+    the compute path end to end — `policy.mesh` shards the one-pass fit
+    across devices (repro.distributed.fit), `fit_fused`/`embed_fused`/
+    `assign_fused` route through the Pallas kernels. The policy is
+    runtime state, not config: it never lands in the spec or artifact.
 
     Fitted attributes (sklearn convention, trailing underscore):
         labels_     (n,)   training cluster labels
@@ -102,7 +106,7 @@ class KernelKMeans:
                  backend: str = "onepass-srht",
                  backend_params: Optional[Dict] = None,
                  block: int = 512, n_restarts: int = 10,
-                 max_iter: int = 20):
+                 max_iter: int = 20, policy=None):
         be.get_backend(backend)                      # fail fast
         valid = kernel_params_for(kernel)            # fail fast
         if kernel_params is None:
@@ -121,6 +125,10 @@ class KernelKMeans:
         self.block = int(block)
         self.n_restarts = int(n_restarts)
         self.max_iter = int(max_iter)
+        # policy (a serve.ComputePolicy) picks the compute path — fused
+        # Pallas kernels, interpret mode, and (for one-pass fits) the
+        # mesh-sharded fit engine. Runtime-only: never persisted.
+        self.policy = policy
         self.model_: Optional[FittedModel] = None
         # Live streaming state (partial_fit); not part of the artifact —
         # resume from a loaded model_ rebuilds it on demand.
@@ -150,6 +158,16 @@ class KernelKMeans:
         return _cached_kernel(self.kernel,
                               tuple(sorted(self.kernel_params.items())))
 
+    def _policy_kwargs(self, spec: ClusteringSpec) -> Dict:
+        """Backend kwargs the policy adds. Only the one-pass backends
+        understand policy=/kernel_statics= — nystrom/exact have no
+        sharded or fused fit path, so a policy is silently inert there
+        (its serve-side knobs still apply through extender())."""
+        if self.policy is None or not self.backend.startswith("onepass-"):
+            return {}
+        return {"policy": self.policy,
+                "kernel_statics": extend._kernel_statics(spec)}
+
     def _package(self, spec: ClusteringSpec, X: jnp.ndarray, U, eigvals,
                  centroids, state: Dict, ref=None) -> FittedModel:
         return FittedModel(
@@ -174,7 +192,7 @@ class KernelKMeans:
         k_backend, k_km = jax.random.split(key)
         emb = be.get_backend(self.backend).fit(
             k_backend, kern, X, self.r, block=self.block,
-            **self.backend_params)
+            **self.backend_params, **self._policy_kwargs(spec))
         km = kmeans(k_km, emb.Y.T, self.k, n_restarts=self.n_restarts,
                     max_iter=self.max_iter)
         self.model_ = self._package(spec, X, emb.U, emb.eigvals,
@@ -217,6 +235,31 @@ class KernelKMeans:
         repro.stream.minibatch).
         """
         X_chunk = jnp.asarray(X_chunk, jnp.float32)
+        # Fail fast on malformed chunks — a transposed chunk or a policy
+        # swap mid-stream would otherwise surface as a shape error (or
+        # silent recompile) deep inside the accumulator.
+        p_fit = None
+        if self._acc is not None and self._acc._X is not None:
+            p_fit = int(self._acc._X.shape[0])
+        elif self.model_ is not None:
+            p_fit = int(self.model_.spec.p)
+        if X_chunk.ndim != 2:
+            raise ValueError(
+                f"partial_fit chunk must be 2-D (p, b); got shape "
+                f"{tuple(X_chunk.shape)}")
+        if p_fit is not None and int(X_chunk.shape[0]) != p_fit:
+            raise ValueError(
+                f"partial_fit chunk has {int(X_chunk.shape[0])} feature "
+                f"rows but this fit holds p={p_fit} — chunks are (p, b) "
+                f"column blocks over a fixed feature dimension")
+        if self._acc is not None and self._acc.policy != self.policy:
+            raise ValueError(
+                f"ComputePolicy changed mid-stream: the streaming state "
+                f"was built under {self._acc.policy!r} but the estimator "
+                f"now holds {self.policy!r}. The fit compute path (mesh "
+                f"sharding / fused kernels) is fixed at the first "
+                f"partial_fit — keep the original policy, or start a "
+                f"fresh fit()")
         if self._acc is None:
             sketch_type = self.backend.split("-", 1)[1] \
                 if self.backend.startswith("onepass-") else None
@@ -227,10 +270,13 @@ class KernelKMeans:
             from repro.stream.accumulate import SketchAccumulator
             k_backend, self._k_km = jax.random.split(_as_key(key))
             fwht_fn = self.backend_params.get("fwht_fn")
+            pk = self._policy_kwargs(
+                self._make_spec(n=0, p=int(X_chunk.shape[0])))
             if self.model_ is not None \
                     and self.model_.stream_counts is not None:
                 self._acc = SketchAccumulator.from_model(self.model_,
-                                                         fwht_fn=fwht_fn)
+                                                         fwht_fn=fwht_fn,
+                                                         **pk)
             else:
                 if capacity is None:
                     raise ValueError(
@@ -246,7 +292,8 @@ class KernelKMeans:
                     block=self.block, sketch_type=sketch_type,
                     fwht_fn=fwht_fn,
                     truncate_basis=bool(self.backend_params.get(
-                        "truncate_basis", False)))
+                        "truncate_basis", False)),
+                    **pk)
         self._acc.add(X_chunk)
         if reeig:
             self.reeig_now(kmeans_mode=kmeans_mode,
@@ -322,9 +369,10 @@ class KernelKMeans:
         the no-kwargs call so repeated predict()s reuse executables)."""
         model = self._require_fit()
         if kwargs:
+            kwargs.setdefault("policy", self.policy)
             return extend.Extender(model, **kwargs)
         if self._extender is None:
-            self._extender = extend.Extender(model)
+            self._extender = extend.Extender(model, policy=self.policy)
         return self._extender
 
     def embed(self, X: jnp.ndarray) -> jnp.ndarray:

@@ -26,6 +26,26 @@ from jax.sharding import PartitionSpec as P
 from repro.core.sketch import fwht as _fwht_ref
 
 
+def butterfly_stages(xl: jnp.ndarray, axis: str, ndev: int) -> jnp.ndarray:
+    """H_dev butterfly across devices, inside a shard_map body.
+
+    xl is one device's (n/ndev, ...) row slab after its LOCAL
+    (unnormalized) FWHT; log2(ndev) ppermute stages exchange the full
+    slab with the XOR-partner and combine +/-. Shared by
+    `distributed_fwht` and the sharded fit engine (distributed/fit.py),
+    which inlines the transform into its per-block update body.
+    """
+    idx = jax.lax.axis_index(axis)
+    h = 1
+    while h < ndev:
+        perm = [(i, i ^ h) for i in range(ndev)]
+        other = jax.lax.ppermute(xl, axis, perm=perm)
+        low = (idx & h) == 0
+        xl = jnp.where(low, xl + other, other - xl)
+        h *= 2
+    return xl
+
+
 def distributed_fwht(x: jnp.ndarray, mesh, axis: str = "data",
                      normalize: bool = True,
                      local_fwht: Optional[Callable] = None) -> jnp.ndarray:
@@ -44,14 +64,7 @@ def distributed_fwht(x: jnp.ndarray, mesh, axis: str = "data",
         # xl: (n/ndev, c) local block. Step 1: H_local.
         xl = lf(xl)
         # Step 2: H_dev butterfly across devices.
-        idx = jax.lax.axis_index(axis)
-        h = 1
-        while h < ndev:
-            perm = [(i, i ^ h) for i in range(ndev)]
-            other = jax.lax.ppermute(xl, axis, perm=perm)
-            low = (idx & h) == 0
-            xl = jnp.where(low, xl + other, other - xl)
-            h *= 2
+        xl = butterfly_stages(xl, axis, ndev)
         if normalize:
             xl = xl / jnp.sqrt(jnp.asarray(n, xl.dtype))
         return xl

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.extend_embed.extend_embed import extend_embed_call
+from repro.kernels.extend_embed.ref import extend_embed_ref
+from repro.kernels.registry import KernelEntry, register_kernel
 
 
 def _is_cpu() -> bool:
@@ -66,3 +68,25 @@ def extend_embed_pallas(X: jnp.ndarray, P: jnp.ndarray, Xb: jnp.ndarray,
     out = extend_embed_call(Xp, Pp, Xbp, kind, gamma, degree, row_tile,
                             interp)
     return out[:r, :w]
+
+
+def _extend_embed_build(key, case):
+    k1, k2, k3 = jax.random.split(key, 3)
+    X = jax.random.normal(k1, (case["p"], case["n"]), jnp.float32)
+    P = jax.random.normal(k2, (case["r"], case["n"]), jnp.float32)
+    Xb = jax.random.normal(k3, (case["p"], case["w"]), jnp.float32)
+    kw = {k: case[k] for k in ("kind", "gamma", "degree") if k in case}
+    return (X, P, Xb), kw, kw
+
+
+register_kernel(KernelEntry(
+    name="extend_embed", op=extend_embed_pallas, ref=extend_embed_ref,
+    cases=(
+        {"p": 2, "n": 100, "r": 2, "w": 12},
+        {"p": 19, "n": 555, "r": 3, "w": 64, "kind": "rbf", "gamma": 0.5},
+        {"p": 7, "n": 1024, "r": 16, "w": 128},
+        {"p": 3, "n": 97, "r": 5, "w": 1, "kind": "linear"},
+        {"p": 2, "n": 250, "r": 2, "w": 23, "kind": "polynomial",
+         "gamma": 1.0, "degree": 3},
+    ),
+    build=_extend_embed_build, rtol=2e-3, atol=2e-3))

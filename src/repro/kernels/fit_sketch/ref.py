@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused fit-sketch accumulate kernel."""
+import jax.numpy as jnp
+
+from repro.kernels.gram.ref import gram_stripe_ref
+
+
+def fit_sketch_ref(X: jnp.ndarray, O: jnp.ndarray, C: jnp.ndarray,
+                   Ocross: jnp.ndarray, V: jnp.ndarray = None,
+                   kind: str = "polynomial", gamma: float = 0.0,
+                   degree: int = 2):
+    """All four contractions of K = kappa(X, C) the fit update consumes.
+
+    X (p, m), O (m, r'), C (p, b), Ocross (b, r'), V (8, m) row 0 the
+    row-validity mask (None = all valid). Returns
+      new_rows (b, r') = K^T O        (the b new sketch rows)
+      delta    (m, r') = K Ocross     (cross-term update, caller masks)
+      rn_rows  (m,)    = row sums of K*K
+      rn_cols  (b,)    = V-masked column sums of K*K
+    """
+    K = gram_stripe_ref(X, C, kind=kind, gamma=gamma, degree=degree)
+    vm = (jnp.ones((X.shape[1],), jnp.float32) if V is None
+          else V[0].astype(jnp.float32))
+    new_rows = K.T @ O
+    delta = K @ Ocross
+    rn_rows = jnp.sum(K * K, axis=1)
+    rn_cols = vm @ (K * K)
+    return new_rows, delta, rn_rows, rn_cols

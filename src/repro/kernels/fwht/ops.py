@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.fwht.fwht import fwht_1level
+from repro.kernels.fwht.ref import fwht_ref
+from repro.kernels.registry import KernelEntry, register_kernel
 
 # Max rows for a single-level slab: 2^13 x 128 lanes x 4B = 4 MiB of VMEM
 # (input + stacked temporaries stay < 16 MiB).
@@ -48,3 +50,15 @@ def fwht_pallas(x: jnp.ndarray, normalize: bool = True, col_tile: int = 128,
     if normalize:
         out = out / jnp.sqrt(jnp.asarray(n, x.dtype))
     return out.reshape(n, c)
+
+
+def _fwht_build(key, case):
+    x = jax.random.normal(key, (case["n"], case["c"]), jnp.float32)
+    return (x,), {}, {}
+
+
+register_kernel(KernelEntry(
+    name="fwht", op=fwht_pallas, ref=fwht_ref,
+    cases=({"n": 8, "c": 3}, {"n": 512, "c": 128}, {"n": 4096, "c": 1},
+           {"n": 1 << 14, "c": 2}),
+    build=_fwht_build, rtol=2e-4, atol=2e-4))

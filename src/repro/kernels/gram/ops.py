@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.gram.gram import gram_stripe_call
+from repro.kernels.gram.ref import gram_stripe_ref
+from repro.kernels.registry import KernelEntry, register_kernel
 
 
 def _is_cpu() -> bool:
@@ -44,3 +46,23 @@ def gram_stripe_pallas(X: jnp.ndarray, Xb: jnp.ndarray,
     Xbp = _pad_to(Xb, 1, 128)
     out = gram_stripe_call(Xp, Xbp, kind, gamma, degree, row_tile, interp)
     return out[:n, :w]
+
+
+def _gram_build(key, case):
+    k1, k2 = jax.random.split(key)
+    X = jax.random.normal(k1, (case["p"], case["n"]), jnp.float32)
+    Xb = jax.random.normal(k2, (case["p"], case["w"]), jnp.float32)
+    kw = {k: case[k] for k in ("kind", "gamma", "degree") if k in case}
+    return (X, Xb), kw, kw
+
+
+register_kernel(KernelEntry(
+    name="gram_stripe", op=gram_stripe_pallas, ref=gram_stripe_ref,
+    cases=(
+        {"p": 2, "n": 100, "w": 12},
+        {"p": 19, "n": 555, "w": 64, "kind": "rbf", "gamma": 0.5},
+        {"p": 7, "n": 1024, "w": 128, "kind": "polynomial", "gamma": 1.0,
+         "degree": 3},
+        {"p": 3, "n": 97, "w": 1, "kind": "linear"},
+    ),
+    build=_gram_build, rtol=2e-3, atol=2e-3))

@@ -6,7 +6,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.kernels.kmeans_assign.kmeans_assign import assign_call
+from repro.kernels.kmeans_assign.ref import assign_ref
+from repro.kernels.registry import KernelEntry, register_kernel
 
 
 def _is_cpu() -> bool:
@@ -32,3 +36,26 @@ def assign_pallas(Y: jnp.ndarray, C: jnp.ndarray, row_tile: int = 512,
     Cp = jnp.pad(C, ((0, k_pad - k), (0, r_pad - r)))
     labels, d2 = assign_call(Yp, Cp, k, row_tile, interp)
     return labels[:n], d2[:n]
+
+
+def _assign_build(key, case):
+    k1, k2 = jax.random.split(key)
+    Y = jax.random.normal(k1, (case["n"], case["r"]), jnp.float32)
+    C = jax.random.normal(k2, (case["k"], case["r"]), jnp.float32)
+    return (Y, C), {}, {}
+
+
+def _assign_compare(got, want, rtol, atol):
+    # Distances must match tightly; labels can differ only on exact ties.
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=rtol, atol=atol)
+    mism = np.asarray(got[0]) != np.asarray(want[0])
+    assert mism.mean() < 0.01
+
+
+register_kernel(KernelEntry(
+    name="kmeans_assign", op=assign_pallas, ref=assign_ref,
+    cases=({"n": 50, "r": 2, "k": 2}, {"n": 1000, "r": 2, "k": 7},
+           {"n": 513, "r": 16, "k": 100}, {"n": 31, "r": 5, "k": 3}),
+    build=_assign_build, rtol=1e-4, atol=1e-4,
+    compare=_assign_compare))

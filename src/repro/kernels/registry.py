@@ -1,0 +1,71 @@
+"""Kernel parity registry: every Pallas package's (op, ref, shapes).
+
+Each kernel package's ops.py registers a KernelEntry at import time —
+its public op, its pure-jnp oracle, the seeded parity-shape grid the
+oracle must match it on, and a `build` callable turning one case dict
+into concrete arguments. The kernel-parity CI job and
+tests/test_kernel_registry.py iterate THIS registry instead of
+hard-coding imports, so a new kernel package (e.g. fit_sketch) gets
+parity coverage by registering itself — no test edits.
+
+Importing `repro.kernels` populates the registry (its __init__ imports
+every package's ops module); this module itself imports none of them, so
+there is no cycle.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+
+class KernelEntry(NamedTuple):
+    """One kernel package's parity contract.
+
+    op:    public jit'd wrapper; must accept interpret= (the parity
+           sweep forces interpret=True so it runs anywhere).
+    ref:   pure-jnp oracle with the same positional signature.
+    cases: tuple of case dicts, each one parity point of the shape grid.
+    build: (key, case) -> (args, op_kwargs, ref_kwargs); args are passed
+           positionally to both op and ref.
+    rtol/atol: allclose tolerances for the default comparison.
+    compare: optional (got, want, rtol, atol) override for ops whose
+           outputs need more than leaf-wise allclose (e.g. argmin label
+           ties in kmeans_assign).
+    """
+    name: str
+    op: Callable
+    ref: Callable
+    cases: Tuple[Dict, ...]
+    build: Callable
+    rtol: float = 2e-3
+    atol: float = 2e-3
+    compare: Optional[Callable] = None
+
+
+_REGISTRY: Dict[str, KernelEntry] = {}
+
+
+def register_kernel(entry: KernelEntry) -> KernelEntry:
+    """Register one kernel package (idempotent per name; re-registering
+    a name replaces it, so module reloads stay harmless)."""
+    if not entry.cases:
+        raise ValueError(f"kernel {entry.name!r} registered with no "
+                         f"parity cases")
+    _REGISTRY[entry.name] = entry
+    return entry
+
+
+def get_kernel(name: str) -> KernelEntry:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown kernel {name!r}; registered: "
+                       f"{registered_kernels()}")
+    return _REGISTRY[name]
+
+
+def registered_kernels() -> list:
+    """Registered kernel names, sorted."""
+    return sorted(_REGISTRY)
+
+
+def kernel_entries() -> Tuple[KernelEntry, ...]:
+    """All entries, name-sorted — what the parity sweep iterates."""
+    return tuple(_REGISTRY[n] for n in registered_kernels())

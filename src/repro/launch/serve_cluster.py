@@ -88,7 +88,7 @@ def main():
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--bench", default="all",
                     choices=["sync", "async", "fused", "swap", "backends",
-                             "stream", "all"],
+                             "stream", "fit_scaling", "all"],
                     help="which benchmark modes land in BENCH_serve.json")
     ap.add_argument("--swap", action="store_true",
                     help="exercise the model lifecycle: publish versions, "
@@ -149,8 +149,8 @@ def main():
 
     from repro.api import KernelKMeans
     from repro.data import blob_ring
-    from repro.serve import (DEFAULT_REGISTRY, ShardedExtender, assign,
-                             embed, write_bench)
+    from repro.serve import (DEFAULT_REGISTRY, ComputePolicy,
+                             ShardedExtender, assign, embed, write_bench)
     from repro.serve.bench import format_bench, run_benches
     from repro.serve.extend import _projection
 
@@ -238,7 +238,31 @@ def main():
           f"({sched.latency.requests} requests recorded; per-bucket "
           f"breakdown over buckets {buckets_seen})")
 
-    # Check 4 (--swap): model lifecycle — publish versions, GC, warm
+    # Check 4: the mesh-sharded one-pass fit (ComputePolicy(mesh=...))
+    # is bit-identical to the single-host fit — the distributed engine's
+    # core contract, checked here on a 1-device mesh (CI's distributed
+    # smoke runs the multi-device variant under XLA_FLAGS).
+    if backend.startswith("onepass-"):
+        from jax.sharding import Mesh
+        pol = ComputePolicy(mesh=Mesh(np.array(jax.devices()[:1]),
+                                      ("data",)))
+        est_sh = KernelKMeans(k=args.k, r=args.r, kernel=args.kernel,
+                              kernel_params=params, backend=backend,
+                              backend_params=backend_params,
+                              block=args.block, policy=pol)
+        est_sh.fit(X, key=k_fit)
+        assert np.array_equal(np.asarray(est.labels_),
+                              np.asarray(est_sh.labels_)), \
+            "sharded fit changed training labels"
+        for leaf in ("U", "eigvals", "centroids"):
+            assert np.array_equal(
+                np.asarray(getattr(model, leaf)),
+                np.asarray(getattr(est_sh.model_, leaf))), \
+                f"sharded fit changed model.{leaf}"
+        print(f"sharded fit ({pol.shards} shard) bit-identical to "
+              f"single-host fit")
+
+    # Check 5 (--swap): model lifecycle — publish versions, GC, warm
     # hot-swap the live row while async requests are pending.
     if args.swap:
         from repro.serve import VersionStore
@@ -283,7 +307,7 @@ def main():
               f"{report.drained_requests} pending requests into the old "
               f"model; p95 before {report.p95_before_ms:.2f} ms")
 
-    # Check 5 (--stream): the living-service loop — partial_fit on an
+    # Check 6 (--stream): the living-service loop — partial_fit on an
     # initial distribution, drifted async traffic trips the DriftMonitor,
     # RetrainWorker refits from the accumulated sketch, publishes to the
     # VersionStore and warm-swaps the registry row. Gated: exactly one
@@ -389,7 +413,8 @@ def main():
     batch_sizes = [int(b) for b in args.batch_sizes.split(",") if b.strip()]
     if not batch_sizes:
         ap.error(f"--batch-sizes {args.batch_sizes!r} parses to nothing")
-    modes = (("sync", "async", "fused", "swap", "backends", "stream")
+    modes = (("sync", "async", "fused", "swap", "backends", "stream",
+              "fit_scaling")
              if args.bench == "all" else (args.bench,))
     embed_fused = {"auto": None, "on": True, "off": False}[args.fused_embed]
     from repro.serve import median_benches
@@ -411,13 +436,19 @@ def main():
     # argmin and the fused gram->projection extend_embed stripe.
     if args.smoke:
         small = Xq[:, :256]
-        lab_jnp, _ = assign(served, small, fused=False)
-        lab_pallas, _ = assign(served, small, fused=True, interpret=True)
+        lab_jnp, _ = assign(served, small,
+                            policy=ComputePolicy(assign_fused=False))
+        lab_pallas, _ = assign(served, small,
+                               policy=ComputePolicy(assign_fused=True,
+                                                    interpret=True))
         assert np.array_equal(np.asarray(lab_jnp), np.asarray(lab_pallas)), \
             "fused Pallas assignment disagrees with jnp path"
         print("fused Pallas assignment path agrees (256 queries)")
-        Y_two = embed(served, small, fused=False)
-        Y_fused = embed(served, small, fused=True, interpret=True)
+        Y_two = embed(served, small,
+                      policy=ComputePolicy(embed_fused=False))
+        Y_fused = embed(served, small,
+                        policy=ComputePolicy(embed_fused=True,
+                                             interpret=True))
         rel_f = (float(jnp.linalg.norm(Y_fused - Y_two)) /
                  max(float(jnp.linalg.norm(Y_two)), 1e-30))
         assert rel_f <= 1e-5, \

@@ -19,6 +19,11 @@ WHICHEVER backend produced it — into a deployable service:
                 gram+projection executables, plus the jnp / fused Pallas
                 kmeans_assign argmin; ShardedExtender shards the
                 extension matmul over a mesh
+  policy.py     ComputePolicy: the one frozen object carrying every
+                compute-path knob (embed_fused / assign_fused /
+                fit_fused / interpret / mesh / mesh_axis), accepted
+                uniformly by the serving front doors AND the one-pass
+                fit; absorbs resolve_pallas_path
   batcher.py    micro-batching with power-of-two shape buckets so variable
                 query traffic never retraces; coalescing request queue
   scheduler.py  AsyncBatcher: futures per request, deadline-driven flush
@@ -41,11 +46,14 @@ from repro.serve.artifact import (ClusteringSpec, FittedModel, ModelSpec,
                                   fit_model, load_model, save_model)
 from repro.serve.batcher import MicroBatcher, bucket_size
 from repro.serve.bench import (benchmark_assign, benchmark_async,
-                               benchmark_backends, benchmark_fused,
-                               benchmark_swap, format_bench,
-                               median_benches, run_benches, write_bench)
+                               benchmark_backends, benchmark_fit_scaling,
+                               benchmark_fused, benchmark_swap,
+                               format_bench, median_benches, run_benches,
+                               write_bench)
 from repro.serve.extend import (Extender, ShardedExtender, assign, embed,
-                                embed_sharded, resolve_pallas_path)
+                                embed_sharded)
+from repro.serve.policy import (ComputePolicy, merge_legacy_kwargs,
+                                resolve_pallas_path)
 from repro.serve.latency import LatencyStats
 from repro.serve.registry import (DEFAULT_REGISTRY, ModelRegistry,
                                   SwapReport)
@@ -59,10 +67,10 @@ __all__ = [
     "load_model", "save_model",
     "MicroBatcher", "bucket_size",
     "benchmark_assign", "benchmark_async", "benchmark_backends",
-    "benchmark_fused", "benchmark_swap",
+    "benchmark_fit_scaling", "benchmark_fused", "benchmark_swap",
     "format_bench", "median_benches", "run_benches", "write_bench",
     "Extender", "ShardedExtender", "assign", "embed", "embed_sharded",
-    "resolve_pallas_path",
+    "ComputePolicy", "merge_legacy_kwargs", "resolve_pallas_path",
     "LatencyStats",
     "DEFAULT_REGISTRY", "ModelRegistry", "SwapReport",
     "AsyncBatcher",

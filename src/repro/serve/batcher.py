@@ -30,6 +30,7 @@ import numpy as np
 from repro.core.sketch import next_pow2
 from repro.serve import extend
 from repro.serve.artifact import FittedModel
+from repro.serve.policy import ComputePolicy, merge_legacy_kwargs
 
 
 def bucket_size(b: int, min_bucket: int = 8, max_bucket: int = 1024) -> int:
@@ -42,11 +43,14 @@ def bucket_size(b: int, min_bucket: int = 8, max_bucket: int = 1024) -> int:
 class MicroBatcher:
     """Bucketed assignment front-end for one FittedModel.
 
-    fused: Pallas kmeans_assign for the argmin (None = off-CPU default);
-    embed_fused: fused extend_embed Pallas stripe engine (same default);
-    interpret: Pallas interpret-mode override for BOTH kernels — the knob
-        CI uses to force the Pallas serving path on CPU (see
-        extend.resolve_pallas_path for the conflict rules).
+    policy: ComputePolicy selecting the compute paths — assign_fused is
+    the Pallas kmeans_assign argmin (None = off-CPU default), embed_fused
+    the fused extend_embed stripe engine (same default), interpret the
+    Pallas interpret-mode override for both (the knob CI uses to force
+    the Pallas serving path on CPU; see serve/policy.py for the conflict
+    rules), and mesh/mesh_axis the mesh-sharded extension. The old
+    fused=/embed_fused=/interpret=/mesh= kwargs are the deprecated
+    spelling of the same fields.
     """
 
     def __init__(self, model: FittedModel, block: Optional[int] = None,
@@ -54,23 +58,26 @@ class MicroBatcher:
                  fused: Optional[bool] = None,
                  embed_fused: Optional[bool] = None,
                  interpret: Optional[bool] = None,
-                 mesh=None, mesh_axis: str = "data"):
+                 mesh=None, mesh_axis: str = "data",
+                 policy: Optional[ComputePolicy] = None):
+        policy = merge_legacy_kwargs(
+            policy, {"assign_fused": fused, "embed_fused": embed_fused,
+                     "interpret": interpret, "mesh": mesh,
+                     "mesh_axis": mesh_axis}, "MicroBatcher")
         self.model = model
+        self.policy = policy
         self.block = block or model.spec.block
         self.min_bucket = min_bucket
         self.max_bucket = max_bucket
-        self.fused = fused
-        # mesh != None routes every bucketed assignment through the
+        self.fused = policy.assign_fused
+        # policy.mesh != None routes every bucketed assignment through the
         # mesh-sharded extension (same bucketing policy, sharded matmul);
         # otherwise one Extender owns the stripe engine + executables.
-        self.sharded = mesh is not None
+        self.sharded = policy.mesh is not None
         self.extender = (
-            extend.ShardedExtender(model, mesh, mesh_axis, self.block,
-                                   fused=embed_fused, interpret=interpret,
-                                   assign_fused=fused)
+            extend.ShardedExtender(model, block=self.block, policy=policy)
             if self.sharded else
-            extend.Extender(model, self.block, fused=embed_fused,
-                            interpret=interpret, assign_fused=fused))
+            extend.Extender(model, self.block, policy=policy))
         self._pending: List[np.ndarray] = []
         self.stats: Dict = {}
         self.reset_stats()

@@ -1,6 +1,6 @@
 """Serving benchmarks: sync/async/fused/swap/backends, 1-device or sharded.
 
-Six modes, all landing in BENCH_serve.json:
+Seven modes, all landing in BENCH_serve.json:
 
   sync     `benchmark_assign` — bucketed assignments/sec per batch size
            through MicroBatcher (one warmup call per size pays compile);
@@ -27,6 +27,12 @@ Six modes, all landing in BENCH_serve.json:
            the re-eig cadence cost, and the detection-to-swap latency of
            one full drift rollout (trigger -> refit -> publish -> warm
            swap) against a real VersionStore + ModelRegistry;
+  fit_scaling `benchmark_fit_scaling` — the mesh-sharded one-pass fit
+           (distributed/fit.ShardedFitEngine) vs the single-host
+           accumulator on an n sweep: partial_fit cols/sec each, plus a
+           per-block bytes-moved model (canonical executables measured
+           by launch/hlo_analysis, fused fit_sketch from its static
+           memory contract) with roofline flops/byte coverage;
   sharded  sync/async with mesh= set — the extension matmul runs through
            serve.extend.ShardedExtender on the given mesh.
 
@@ -55,7 +61,11 @@ Schema (write_bench):
                 "partial_fit_cols_per_sec": ..., "reeig_s": ...,
                 "rollout": {"detect_to_swap_s": ..., "refit_s": ...,
                             "publish_s": ..., "swap_s": ...,
-                            "stranded_futures": 0, "retrains": 1}}}
+                            "stranded_futures": 0, "retrains": 1}},
+     "fit_scaling": {"shards": s, "rows": [{"n": ...,
+                     "single_cols_per_sec": ..., "sharded_cols_per_sec":
+                     ..., "bytes": {"two_pass_bytes": ..., "fused_bytes":
+                     ..., "flops": ..., ...}}, ...]}}
 """
 from __future__ import annotations
 
@@ -641,6 +651,134 @@ def benchmark_stream(model: FittedModel, n_chunks: int = 8,
     }
 
 
+def _fit_block_traffic(model: FittedModel, n: int, block: int) -> Dict:
+    """Per-block HBM bytes of the one-pass fit update at capacity n.
+
+    Canonical path measured over its three real executables (gram
+    stripe, normalized FWHT of the zero-padded stripe, cross-term
+    matmul) via `launch.hlo_analysis.analyze`; the fused fit_sketch
+    Pallas kernel is a custom call opaque to HLO analysis, so its bytes
+    come from the static memory contract (every padded operand and
+    output crosses HBM once, the accumulator is revisited in VMEM).
+    Flops are the analyzer's dot-op count (the FWHT's adds are not dots;
+    the roofline ratio is therefore a floor for the canonical path).
+    """
+    from repro.core.sketch import fwht
+    from repro.kernels.fit_sketch.ops import padded_shapes
+    from repro.launch.hlo_analysis import analyze
+
+    spec = model.spec
+    p, rp = spec.p, spec.r + spec.oversampling
+    b = min(block, n)
+    n_pad = 1 if n <= 1 else 1 << (n - 1).bit_length()
+    kern = model.kernel_fn()
+    f32 = jnp.float32
+    texts = [
+        jax.jit(lambda X, c: kern(X, c)).lower(
+            jax.ShapeDtypeStruct((p, n), f32),
+            jax.ShapeDtypeStruct((p, b), f32)).compile().as_text(),
+        jax.jit(lambda M: fwht(M)).lower(
+            jax.ShapeDtypeStruct((n_pad, b), f32)).compile().as_text(),
+        jax.jit(lambda K, c: K @ c).lower(
+            jax.ShapeDtypeStruct((n, b), f32),
+            jax.ShapeDtypeStruct((b, rp), f32)).compile().as_text(),
+    ]
+    parts = [analyze(t) for t in texts]
+    two_pass = sum(a["traffic_bytes"] for a in parts)
+    flops = sum(a["flops"] for a in parts)
+    row_tile, m_pad, b_pad, rp_pad = padded_shapes(n, b, rp)
+    fused = 4.0 * (p * m_pad + m_pad * rp_pad + p * b_pad +
+                   b_pad * rp_pad + 8 * m_pad +          # X, O, C, Ocr, V
+                   b_pad * rp_pad + m_pad * rp_pad +     # acc, delta
+                   m_pad * 128 + 8 * b_pad)              # rn ledgers
+    return {
+        "two_pass_bytes": float(two_pass),
+        "two_pass_source": "launch.hlo_analysis over gram + fwht + "
+                           "cross executables",
+        "fused_bytes": float(fused),
+        "fused_source": "fit_sketch kernel memory contract (Pallas "
+                        "custom call is opaque to HLO analysis)",
+        "flops": float(flops),
+        "flops_per_byte_two_pass": float(flops / two_pass)
+        if two_pass else 0.0,
+        "flops_per_byte_fused": float(flops / fused) if fused else 0.0,
+        "saved_bytes": float(two_pass - fused),
+    }
+
+
+def benchmark_fit_scaling(model: FittedModel, ns: Sequence[int] = (128, 256,
+                                                                   512),
+                          repeats: int = 3,
+                          key: Optional[jax.Array] = None,
+                          block: Optional[int] = None,
+                          policy=None) -> Dict:
+    """Sharded one-pass fit vs single-host accumulator on an n sweep.
+
+    For each n: stream n columns chunk-by-chunk through
+    `KernelKMeans.partial_fit` with `reeig=False` (the steady-state
+    ingest path) twice — once single-host, once with a mesh
+    ComputePolicy over all local devices (distributed/fit engine) — and
+    report cols/sec each (best pass of `repeats`, fresh estimator per
+    pass; the warmup chunk pays compile outside the timed loop). On a
+    1-process CPU run the mesh has one device, so "sharded" measures
+    the engine's overhead over the canonical path at parity (the paths
+    are bit-identical there); real scaling numbers come from
+    multi-device runs (tests/fit_dist_checks.py, the CI 2-device
+    smoke). Each row carries the `_fit_block_traffic` bytes-moved model,
+    which is backend-independent.
+    """
+    from jax.sharding import Mesh
+
+    from repro.api import KernelKMeans
+    from repro.serve.policy import ComputePolicy
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    spec = model.spec
+    backend = (spec.backend if spec.backend.startswith("onepass-")
+               else "onepass-srht")
+    chunk = min(block or spec.block, min(int(n) for n in ns))
+    if policy is None:
+        policy = ComputePolicy(
+            mesh=Mesh(np.asarray(jax.devices()), ("data",)))
+
+    def one_pass(n_chunks, capacity, X, pol):
+        est = KernelKMeans(k=spec.k, r=spec.r, kernel=spec.kernel,
+                           kernel_params=spec.kernel_params,
+                           backend=backend, block=chunk, policy=pol)
+        est.partial_fit(X[:, :chunk], key=key, capacity=capacity,
+                        reeig=False)               # warmup chunk
+        t0 = time.perf_counter()
+        for i in range(1, n_chunks):
+            est.partial_fit(X[:, i * chunk:(i + 1) * chunk], reeig=False)
+        jax.block_until_ready(est._acc.W)
+        return time.perf_counter() - t0
+
+    rows = []
+    seen = set()
+    for n in ns:
+        n_chunks = max(int(n) // chunk, 2)
+        capacity = n_chunks * chunk
+        if capacity in seen:    # small n collapse onto the same capacity
+            continue            # when chunk > n/2; one row per capacity
+        seen.add(capacity)
+        X = jax.random.normal(key, (spec.p, capacity), jnp.float32)
+        single = min(one_pass(n_chunks, capacity, X, None)
+                     for _ in range(max(int(repeats), 1)))
+        sharded = min(one_pass(n_chunks, capacity, X, policy)
+                      for _ in range(max(int(repeats), 1)))
+        cols = (n_chunks - 1) * chunk
+        rows.append({
+            "n": int(capacity), "chunk_cols": int(chunk),
+            "single_cols_per_sec": cols / single,
+            "sharded_cols_per_sec": cols / sharded,
+            "sharded_over_single": single / sharded,
+            "bytes": _fit_block_traffic(model, capacity, chunk),
+        })
+    return {"mode": "fit_scaling", "fit_backend": backend,
+            "shards": int(policy.shards), "chunk_cols": int(chunk),
+            "repeats": int(repeats), "rows": rows}
+
+
 def machine_calibration() -> Dict:
     """Machine-speed probe: best-call time of a fixed jitted matmul.
 
@@ -720,6 +858,12 @@ def run_benches(model: FittedModel, modes: Sequence[str] = ("sync", "async"),
         bench["stream"] = benchmark_stream(
             model, repeats=repeats, key=key, block=block,
             max_wait_ms=max_wait_ms)
+    if "fit_scaling" in modes:
+        # The mesh here is every LOCAL device; multi-host meshes go
+        # through the library API (pass policy= to benchmark_fit_scaling
+        # directly) rather than the CLI driver.
+        bench["fit_scaling"] = benchmark_fit_scaling(
+            model, repeats=repeats, key=key, block=block)
     if "backends" in modes:
         if data is None:
             bench["backends"] = {"skipped": "no (X, labels) data passed"}
@@ -749,7 +893,13 @@ def median_benches(benches: Sequence[Dict]) -> Dict:
     def merge(vals):
         v0 = vals[0]
         if isinstance(v0, dict):
-            return {k: merge([v[k] for v in vals]) for k in v0}
+            # Timing-dependent sections (the async per-bucket breakdown)
+            # can legitimately differ in keys across passes — a request
+            # that coalesced into bucket 512 on pass 1 may land in 1024
+            # on pass 2. Median over the passes that saw the key.
+            return {k: merge([v[k] for v in vals
+                              if isinstance(v, dict) and k in v])
+                    for k in v0}
         if isinstance(v0, list):
             return [merge([v[i] for v in vals]) for i in range(len(v0))]
         if isinstance(v0, bool) or not isinstance(v0, (int, float)):
@@ -807,6 +957,18 @@ def format_bench(bench: Dict) -> str:
             f" (refit {ro['refit_s']:.3f} s, publish {ro['publish_s']:.3f}"
             f" s, swap {ro['swap_s']:.3f} s)  stranded futures "
             f"{ro['stranded_futures']}")
+    if "fit_scaling" in bench:
+        fs = bench["fit_scaling"]
+        for row in fs["rows"]:
+            by = row["bytes"]
+            lines.append(
+                f"fit n={row['n']:>6d} ({fs['shards']} shard"
+                f"{'s' if fs['shards'] != 1 else ''}): single "
+                f"{row['single_cols_per_sec']:>9.0f} cols/sec  sharded "
+                f"{row['sharded_cols_per_sec']:>9.0f} cols/sec  "
+                f"block HBM {by['two_pass_bytes'] / 1e6:.2f} MB -> fused "
+                f"{by['fused_bytes'] / 1e6:.2f} MB "
+                f"({by['flops_per_byte_fused']:.1f} flops/B)")
     if "fused" in bench:
         f = bench["fused"]
         hbm = f["hbm"]

@@ -55,7 +55,6 @@ see docs/SERVING.md.
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -68,6 +67,11 @@ from repro.core.kmeans import _sq_dists
 from repro.kernels.extend_embed.ops import extend_embed_pallas
 from repro.kernels.kmeans_assign.ops import assign_pallas
 from repro.serve.artifact import FittedModel
+from repro.serve.policy import (ComputePolicy, merge_legacy_kwargs,
+                                resolve_pallas_path)
+
+__all__ = ["Extender", "ShardedExtender", "embed", "assign",
+           "embed_sharded", "resolve_pallas_path"]
 
 # Keep in sync with core/nystrom._ABS_EIG_FLOOR: the Nystrom fit floors
 # its truncation threshold here so fit and serve agree on which
@@ -86,48 +90,8 @@ def _kernel_statics(spec) -> Tuple[str, float, int]:
     return spec.kernel, float(kp.get("gamma", 0.0)), int(kp.get("degree", 2))
 
 
-def resolve_pallas_path(fused: Optional[bool], interpret: Optional[bool],
-                        what: str) -> Tuple[bool, bool]:
-    """Resolve a (fused, interpret) request into a concrete path choice.
-
-    Contract (the fix for the old silently-ignored CPU override):
-
-      fused=None       Pallas off-CPU; on CPU only when interpret=True
-                       explicitly opts in (how CI forces the Pallas path).
-      fused=True, CPU  honoured — runs in interpret mode, warning unless
-                       interpret=True was passed explicitly.
-      fused=True, interpret=False, CPU   ValueError: Pallas cannot lower
-                       natively on CPU; the settings conflict.
-      fused=False, interpret set         ValueError: interpret only
-                       applies to the Pallas path; the settings conflict.
-    """
-    cpu = jax.default_backend() == "cpu"
-    if fused is False:
-        if interpret is not None:
-            raise ValueError(
-                f"{what}: fused=False conflicts with interpret="
-                f"{interpret} — the interpret flag only applies to the "
-                f"Pallas path")
-        return False, False
-    if fused is None:
-        fused = (not cpu) or interpret is True
-        if not fused:
-            return False, False
-    if cpu:
-        if interpret is False:
-            raise ValueError(
-                f"{what}: the Pallas path was requested with "
-                f"interpret=False on the CPU backend, where Pallas "
-                f"cannot lower natively — drop interpret=False or run "
-                f"on an accelerator")
-        if interpret is None:
-            warnings.warn(
-                f"{what}: Pallas path requested on the CPU backend; "
-                f"running in interpret mode (pass interpret=True to "
-                f"acknowledge, or fused=False for the jnp path)",
-                stacklevel=3)
-        return True, True
-    return True, bool(interpret) if interpret is not None else False
+# resolve_pallas_path moved to serve/policy.py (absorbed into
+# ComputePolicy); re-exported above so existing imports keep working.
 
 
 @jax.jit
@@ -169,23 +133,28 @@ class Extender:
     path choices, so serving front-ends (MicroBatcher/AsyncBatcher)
     construct one Extender and reuse its executables.
 
-    fused:        extend_embed stripe engine (None = Pallas off-CPU).
-    assign_fused: Pallas kmeans_assign for the argmin (same default).
-    interpret:    Pallas interpret-mode override, applied to both kernels;
-                  see `resolve_pallas_path` for the conflict rules.
+    policy: a ComputePolicy; embed_fused picks the extend_embed stripe
+    engine, assign_fused the Pallas kmeans_assign argmin, interpret the
+    Pallas interpret-mode override for both (see
+    policy.resolve_pallas_path for the conflict rules). The `fused=` /
+    `interpret=` / `assign_fused=` kwargs are the deprecated spelling of
+    the same three fields.
     """
 
     def __init__(self, model: FittedModel, block: Optional[int] = None, *,
+                 policy: Optional[ComputePolicy] = None,
                  fused: Optional[bool] = None,
                  interpret: Optional[bool] = None,
                  assign_fused: Optional[bool] = None):
+        policy = merge_legacy_kwargs(
+            policy, {"embed_fused": fused, "interpret": interpret,
+                     "assign_fused": assign_fused}, "Extender")
         self.model = model
+        self.policy = policy
         self.block = block or model.spec.block
-        self._interpret_arg = interpret
-        self.fused, self._interpret = resolve_pallas_path(
-            fused, interpret, "fused extend_embed stripe")
-        self.assign_fused, self._assign_interpret = resolve_pallas_path(
-            assign_fused, interpret, "Pallas kmeans_assign")
+        self._interpret_arg = policy.interpret
+        self.fused, self._interpret = policy.resolve_embed()
+        self.assign_fused, self._assign_interpret = policy.resolve_assign()
         # Backend-agnostic: the reference set the kernel stripes run
         # against (training points, or the Nystrom landmarks).
         self._ref = model.extension_ref
@@ -253,12 +222,15 @@ class Extender:
 
 def embed(model: FittedModel, Xq: jnp.ndarray, block: Optional[int] = None,
           fused: Optional[bool] = None,
-          interpret: Optional[bool] = None) -> jnp.ndarray:
+          interpret: Optional[bool] = None, *,
+          policy: Optional[ComputePolicy] = None) -> jnp.ndarray:
     """One-shot embed Xq (p, b) -> (r, b). Serving paths should hold an
     `Extender` and reuse it; this constructs a throwaway one (the jitted
     stripe executables are shared module-level, so only the tiny
     projection precompute is repaid)."""
-    return Extender(model, block, fused=fused, interpret=interpret).embed(Xq)
+    policy = merge_legacy_kwargs(
+        policy, {"embed_fused": fused, "interpret": interpret}, "embed")
+    return Extender(model, block, policy=policy).embed(Xq)
 
 
 @jax.jit
@@ -271,18 +243,22 @@ def _assign_jnp(Yq: jnp.ndarray, C: jnp.ndarray
 def assign(model: FittedModel, Xq: jnp.ndarray,
            block: Optional[int] = None, fused: Optional[bool] = None,
            embed_fused: Optional[bool] = None,
-           interpret: Optional[bool] = None
+           interpret: Optional[bool] = None, *,
+           policy: Optional[ComputePolicy] = None
            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Assign queries to fitted clusters: (labels (b,), sq distance (b,)).
 
-    fused routes the argmin through the Pallas kmeans_assign kernel (the
-    serving default off-CPU); embed_fused picks the extend_embed stripe
-    engine; interpret applies to both Pallas kernels (see
-    `resolve_pallas_path` for the explicit CPU-override contract).
+    policy.assign_fused routes the argmin through the Pallas
+    kmeans_assign kernel (the serving default off-CPU); embed_fused picks
+    the extend_embed stripe engine; interpret applies to both Pallas
+    kernels (see policy.resolve_pallas_path for the explicit CPU-override
+    contract). The positional fused/embed_fused/interpret kwargs are the
+    deprecated spelling.
     """
-    ext = Extender(model, block, fused=embed_fused, interpret=interpret,
-                   assign_fused=fused)
-    return ext.assign(Xq)
+    policy = merge_legacy_kwargs(
+        policy, {"assign_fused": fused, "embed_fused": embed_fused,
+                 "interpret": interpret}, "assign")
+    return Extender(model, block, policy=policy).assign(Xq)
 
 
 # ---------------------------------------------------------------------------
@@ -314,24 +290,36 @@ class ShardedExtender:
     floats — independent of n.
     """
 
-    def __init__(self, model: FittedModel, mesh, axis: str = "data",
+    def __init__(self, model: FittedModel, mesh=None, axis: str = "data",
                  block: Optional[int] = None,
                  fused: Optional[bool] = None,
                  interpret: Optional[bool] = None,
-                 assign_fused: Optional[bool] = None):
+                 assign_fused: Optional[bool] = None, *,
+                 policy: Optional[ComputePolicy] = None):
+        # mesh/axis may arrive positionally (the class's raison d'etre,
+        # not deprecated) or inside the policy; the Pallas knobs follow
+        # the standard legacy-kwarg shim.
+        policy = merge_legacy_kwargs(
+            policy, {"embed_fused": fused, "interpret": interpret,
+                     "assign_fused": assign_fused}, "ShardedExtender")
+        if mesh is None:
+            mesh, axis = policy.mesh, policy.mesh_axis
+        if mesh is None:
+            raise ValueError("ShardedExtender needs a mesh — pass mesh= "
+                             "or a policy with policy.mesh set")
         if axis not in mesh.axis_names:
             raise ValueError(f"mesh has no axis {axis!r}; "
                              f"have {mesh.axis_names}")
         self.model = model
         self.mesh = mesh
         self.axis = axis
+        self.policy = policy
         self.block = block or model.spec.block
         self.shards = dict(mesh.shape)[axis]
-        self._interpret_arg = interpret
-        self.fused, self._interpret = resolve_pallas_path(
-            fused, interpret, "fused extend_embed stripe (sharded)")
-        self.assign_fused, self._assign_interpret = resolve_pallas_path(
-            assign_fused, interpret, "Pallas kmeans_assign")
+        self._interpret_arg = policy.interpret
+        self.fused, self._interpret = policy.resolve_embed(
+            "fused extend_embed stripe (sharded)")
+        self.assign_fused, self._assign_interpret = policy.resolve_assign()
         # Reference set (training points or Nystrom landmarks), padded to
         # a column multiple of the shard count.
         n = model.n_ref

@@ -35,6 +35,11 @@ through the whole extension matmul and the bucketed path pads to the same
 pow-2 widths regardless of how requests were grouped (see
 serve/batcher.py), so any interleaving of flushes yields the same labels
 as one big drain. tests/test_scheduler.py pins this.
+
+Compute-path selection (Pallas kernels, mesh sharding) arrives as a
+`policy=ComputePolicy(...)` kwarg forwarded verbatim to the underlying
+MicroBatcher — AsyncBatcher adds no knobs of its own (the deprecated
+fused=/embed_fused=/mesh= spellings forward the same way).
 """
 from __future__ import annotations
 

@@ -57,6 +57,13 @@ class SketchAccumulator:
     r:           target rank of `eig()`
     oversampling/block/sketch_type/fwht_fn/truncate_basis: exactly the
                  one-pass backend knobs (repro.api.backends)
+    policy:      optional serve.ComputePolicy. policy.mesh routes every
+                 block update through the mesh-sharded fit engine
+                 (distributed/fit.py, bit-identical on one device);
+                 policy.fit_fused routes it through the fused
+                 fit_sketch Pallas kernel (fp-tolerance parity).
+    kernel_statics: (kind, gamma, degree) for the fused kernel; required
+                 whenever fit_fused resolves on.
 
     add(X_chunk) stages columns and applies full-block updates;
     eig() applies the staged tail on a copy and runs Alg. 1 lines 3-6
@@ -68,7 +75,8 @@ class SketchAccumulator:
                  r: int, *, oversampling: int = 10, block: int = 512,
                  sketch_type: str = "srht",
                  fwht_fn: Optional[Callable] = None,
-                 truncate_basis: bool = False):
+                 truncate_basis: bool = False,
+                 policy=None, kernel_statics=None):
         capacity = int(capacity)
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
@@ -83,10 +91,12 @@ class SketchAccumulator:
                    jnp.zeros((capacity, r_prime), jnp.float32),
                    jnp.zeros((capacity,), jnp.float32), 0, None,
                    block=block, truncate_basis=truncate_basis,
-                   fwht_fn=fwht_fn)
+                   fwht_fn=fwht_fn, policy=policy,
+                   kernel_statics=kernel_statics)
 
     def _bind(self, kernel, r, sketch, W, row_norms2, n_applied, X, *,
-              block, truncate_basis, fwht_fn) -> None:
+              block, truncate_basis, fwht_fn, policy=None,
+              kernel_statics=None) -> None:
         self.kernel = kernel
         self.r = int(r)
         self.sketch = sketch
@@ -100,6 +110,43 @@ class SketchAccumulator:
         self.reeigs = 0
         self.last_fro2 = 0.0
         self.last_approx_err = 0.0
+        self.policy = policy
+        self.kernel_statics = kernel_statics
+        self._engine = None
+        if policy is not None:
+            self._fit_fused, self._fit_interpret = policy.resolve_fit()
+        else:
+            self._fit_fused, self._fit_interpret = False, False
+        if self._fit_fused and kernel_statics is None:
+            raise ValueError(
+                "fit_fused needs the kernel statics (kind, gamma, degree) "
+                "for the Pallas fit_sketch kernel — fit through "
+                "KernelKMeans (which passes them from the spec) or give "
+                "SketchAccumulator kernel_statics=")
+        if X is not None:
+            self._ensure_engine(int(X.shape[0]))
+
+    def _ensure_engine(self, p: int) -> None:
+        """Build the mesh-sharded fit engine on first sight of data (the
+        row count p is not known before then): pads the current sketch
+        state row-sharded and loads any existing columns into the
+        sharded data buffer. From then on self.W / self.row_norms2 hold
+        the PADDED sharded (N, r') / (N,) arrays; eig() and
+        state_arrays() gather the logical [:capacity] rows back."""
+        if (self._engine is not None or self.policy is None
+                or self.policy.mesh is None):
+            return
+        from repro.distributed.fit import ShardedFitEngine
+
+        self._engine = ShardedFitEngine(
+            self.policy.mesh, self.policy.mesh_axis, self.sketch,
+            self.kernel, p, fit_fused=self._fit_fused,
+            interpret=self._fit_interpret,
+            kernel_statics=self.kernel_statics)
+        self.W = self._engine.pad_rows(self.W)
+        self.row_norms2 = self._engine.pad_vec(self.row_norms2)
+        if self._X is not None:
+            self._engine.ingest(self._X)
 
     # -- resume ----------------------------------------------------------
 
@@ -108,7 +155,8 @@ class SketchAccumulator:
                     W: jnp.ndarray, row_norms2: jnp.ndarray,
                     n_applied: int, X: Optional[jnp.ndarray], *,
                     block: int = 512, truncate_basis: bool = False,
-                    fwht_fn: Optional[Callable] = None
+                    fwht_fn: Optional[Callable] = None,
+                    policy=None, kernel_statics=None
                     ) -> "SketchAccumulator":
         """Rebuild an accumulator around existing state (see from_model)."""
         acc = cls.__new__(cls)
@@ -116,7 +164,8 @@ class SketchAccumulator:
                   jnp.asarray(row_norms2, jnp.float32), n_applied,
                   None if X is None else jnp.asarray(X, jnp.float32),
                   block=block, truncate_basis=truncate_basis,
-                  fwht_fn=fwht_fn)
+                  fwht_fn=fwht_fn, policy=policy,
+                  kernel_statics=kernel_statics)
         if acc.n_added < acc.n_applied or acc.n_added > acc.capacity:
             raise ValueError(
                 f"inconsistent stream state: {acc.n_added} columns of data "
@@ -124,7 +173,8 @@ class SketchAccumulator:
         return acc
 
     @classmethod
-    def from_model(cls, model, *, fwht_fn: Optional[Callable] = None
+    def from_model(cls, model, *, fwht_fn: Optional[Callable] = None,
+                   policy=None, kernel_statics=None
                    ) -> "SketchAccumulator":
         """Resume accumulation from a (possibly published) FittedModel.
 
@@ -156,7 +206,7 @@ class SketchAccumulator:
             model.X_train, block=spec.block,
             truncate_basis=bool(
                 spec.backend_params.get("truncate_basis", False)),
-            fwht_fn=fwht_fn)
+            fwht_fn=fwht_fn, policy=policy, kernel_statics=kernel_statics)
 
     # -- views -----------------------------------------------------------
 
@@ -201,8 +251,14 @@ class SketchAccumulator:
             raise ValueError(
                 f"capacity {self.capacity} exceeded: have {self.n_added} "
                 f"columns, chunk adds {int(X_chunk.shape[1])}")
+        # Build the engine BEFORE concatenating — _ensure_engine loads
+        # the pre-existing columns into the sharded buffer, then the new
+        # chunk goes in once below.
+        self._ensure_engine(int(X_chunk.shape[0]))
         self._X = (X_chunk if self._X is None
                    else jnp.concatenate([self._X, X_chunk], axis=1))
+        if self._engine is not None:
+            self._engine.ingest(X_chunk)
         while self.n_added - self.n_applied >= self.block:
             self.W, self.row_norms2 = self._apply(
                 self.W, self.row_norms2, self.n_applied, self.block)
@@ -210,8 +266,17 @@ class SketchAccumulator:
         return self
 
     def _apply(self, W, row_norms2, q, b):
-        """One canonical block update: fold columns [q, q+b) of the data
-        into (W, row_norms2); pure — returns the updated pair."""
+        """One block update: fold columns [q, q+b) of the data into
+        (W, row_norms2); pure — returns the updated pair.
+
+        Dispatch: mesh policy -> the sharded engine (bit-identical to
+        the canonical path on one device); fit_fused policy -> the
+        single-host Pallas fit_sketch path (fp-tolerance parity, like
+        fused serving); otherwise the canonical eager update below."""
+        if self._engine is not None:
+            return self._engine.apply(W, row_norms2, q, b)
+        if self._fit_fused:
+            return self._apply_fused(W, row_norms2, q, b)
         C = self._X[:, q:q + b]
         Kc = self.kernel(self._X[:, :q + b], C)            # (q+b, b)
         if isinstance(self.sketch, SRHT):
@@ -223,22 +288,69 @@ class SketchAccumulator:
             new_rows = Kc.T @ self.sketch.omega[:q + b]
             cross = self.sketch.omega[q:q + b]
         W = W.at[q:q + b].set(new_rows)
-        row_norms2 = row_norms2.at[q:q + b].set(jnp.sum(Kc * Kc, axis=0))
+        # Column norms over a statically zero-padded stripe: the
+        # reduction length is shape-stable (n_pad / capacity) rather
+        # than q+b, so the mesh-sharded fit engine (distributed/fit.py)
+        # — which can only ever reduce over its fixed padded row space —
+        # reproduces these bits exactly on one device. The trailing
+        # zero rows are value-neutral.
+        n_red = (self.sketch.n_pad if isinstance(self.sketch, SRHT)
+                 else self.capacity)
+        Kf = jnp.zeros((n_red, b), jnp.float32).at[:q + b].set(Kc)
+        K2f = Kf * Kf
+        row_norms2 = row_norms2.at[q:q + b].set(jnp.sum(K2f, axis=0))
         if q:
             W = W.at[:q].add(Kc[:q] @ cross)
             row_norms2 = row_norms2.at[:q].add(
                 jnp.sum(Kc[:q] * Kc[:q], axis=1))
         return W, row_norms2
 
+    def _apply_fused(self, W, row_norms2, q, b):
+        """Single-host block update through the fused fit_sketch Pallas
+        kernel: gram-stripe -> sketch-accumulate in one pass with the
+        accumulator VMEM-resident. Materializes the Omega row prefix
+        (the price of trading the FWHT for an MXU contraction; the
+        distributed engine shards that slab instead)."""
+        from repro.kernels.fit_sketch.ops import fit_sketch_pallas
+
+        kind, gamma, degree = self.kernel_statics
+        Xpre = self._X[:, :q + b]
+        C = self._X[:, q:q + b]
+        if isinstance(self.sketch, SRHT):
+            O = srht_rows(self.sketch, 0, q + b)
+            cross = srht_rows(self.sketch, q, q + b)
+        else:
+            O = self.sketch.omega[:q + b]
+            cross = self.sketch.omega[q:q + b]
+        new_rows, delta, rn_rows, rn_cols = fit_sketch_pallas(
+            Xpre, O, C, cross, kind=kind, gamma=float(gamma),
+            degree=int(degree), interpret=self._fit_interpret)
+        W = W.at[q:q + b].set(new_rows)
+        row_norms2 = row_norms2.at[q:q + b].set(rn_cols)
+        if q:
+            W = W.at[:q].add(delta[:q])
+            row_norms2 = row_norms2.at[:q].add(rn_rows[:q])
+        return W, row_norms2
+
     def _effective_state(self):
         """(W, row_norms2, n_eff) with the staged tail applied on a COPY
         — the canonical block alignment is never disturbed, so later
-        adds keep the chunk-invariant update sequence."""
+        adds keep the chunk-invariant update sequence. In sharded mode
+        the result is gathered back to the logical (capacity, .) host
+        view: eig() always runs the canonical single-host core on it,
+        which is what makes sharded eig bit-identical by construction
+        (the sketch is the ONLY thing small enough to be worth
+        gathering — the paper's point)."""
         tail = self.n_added - self.n_applied
         if tail == 0:
-            return self.W, self.row_norms2, self.n_applied
-        W, rn = self._apply(self.W, self.row_norms2, self.n_applied, tail)
-        return W, rn, self.n_added
+            W, rn, n_eff = self.W, self.row_norms2, self.n_applied
+        else:
+            W, rn = self._apply(self.W, self.row_norms2, self.n_applied,
+                                tail)
+            n_eff = self.n_added
+        if self._engine is not None:
+            W, rn = self._engine.gather(W), self._engine.gather(rn)
+        return W, rn, n_eff
 
     # -- eigendecomposition ----------------------------------------------
 
@@ -290,8 +402,12 @@ class SketchAccumulator:
                   "sketch_rows": self.sketch.rows}
         else:
             st = {"sketch_omega": self.sketch.omega}
-        st["stream_w"] = self.W
-        st["stream_row_norms2"] = self.row_norms2
+        if self._engine is not None:
+            st["stream_w"] = self._engine.gather(self.W)
+            st["stream_row_norms2"] = self._engine.gather(self.row_norms2)
+        else:
+            st["stream_w"] = self.W
+            st["stream_row_norms2"] = self.row_norms2
         st["stream_counts"] = jnp.array([self.n_applied, self.capacity],
                                         jnp.int32)
         return st

@@ -17,3 +17,17 @@ def test_distributed_checks():
     )
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
     assert "ALL DIST CHECKS PASSED" in r.stdout
+
+
+def test_sharded_fit_distributed_checks():
+    """2-device sharded one-pass fit: close to single-host, chunk- and
+    resume-invariant bitwise on the mesh (tests/fit_dist_checks.py)."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    r = subprocess.run(
+        [sys.executable, str(root / "tests" / "fit_dist_checks.py")],
+        capture_output=True, text=True, timeout=1200,
+        env={"PYTHONPATH": str(root / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "ALL FIT DIST CHECKS PASSED" in r.stdout
