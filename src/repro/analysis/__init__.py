@@ -1,0 +1,13 @@
+"""repro.analysis: CI-gated static contract checker.
+
+Three checker families behind one runner (`python -m repro.analysis`):
+
+* jaxlint (J00x)      — AST lint for JAX tracing/RNG discipline
+* contracts (C00x)    — Pallas memory contracts vs. actual BlockSpecs
+* locks (L00x)        — serve-tier guarded-by / lock-order discipline
+
+See docs/ANALYSIS.md for the rule catalogue and the suppression
+workflow (`analysis_baseline.toml`).
+"""
+from repro.analysis.findings import RULES, Finding          # noqa: F401
+from repro.analysis.runner import main, run                 # noqa: F401

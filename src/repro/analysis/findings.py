@@ -1,0 +1,93 @@
+"""Finding model + rule catalogue for the static contract checker.
+
+Every checker (jaxlint, kernel contracts, lock discipline) reports
+`Finding` records — rule id, file:line anchor, the enclosing symbol and
+a one-line message — so the runner can render one table, match baseline
+suppressions uniformly, and gate CI on the active count.
+
+Rule ids are stable API: tests, `analysis_baseline.toml` entries and the
+docs catalogue (docs/ANALYSIS.md) all key on them. Add new rules with
+new ids; never recycle a retired id.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+# -- rule catalogue ---------------------------------------------------------
+# id -> one-line description (docs/ANALYSIS.md carries the long form).
+
+RULES: Dict[str, str] = {
+    # jaxlint (AST): JAX tracing / RNG discipline
+    "J001": "PRNG key consumed more than once without a jax.random.split",
+    "J002": "host-sync call (.item()/.tolist()/np.asarray/float/int) "
+            "inside a jit- or Pallas-traced scope",
+    "J003": "Python `if`/`while` branches on a tracer-typed value inside "
+            "a traced scope",
+    "J004": "mutable value (dict/list/non-frozen dataclass) declared as a "
+            "static jit argument — retrace/recompile hazard",
+    # kernel-contract verifier (registry-driven)
+    "C001": "kernel's declared memory-contract bytes diverge from the "
+            "BlockSpec-derived HBM traffic",
+    "C002": "kernel's per-grid-step VMEM residency exceeds the budget at "
+            "a registered parity shape",
+    "C003": "registered kernel package has no memory contract",
+    # infrastructure
+    "X001": "file does not parse",
+    # lock discipline (serve tier)
+    "L001": "field annotated `# guarded-by: <lock>` mutated outside "
+            "`with self.<lock>`",
+    "L002": "lock acquisition order contradicts the file's "
+            "`# lock-order:` contract",
+    "L003": "guarded-by/lock-order annotation names a lock the class "
+            "never defines",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One checker hit, anchored to file:line and the enclosing symbol."""
+    rule: str
+    path: str          # repo-relative posix path
+    line: int
+    symbol: str        # enclosing function/class qualname ("" at module level)
+    message: str
+
+    def render(self) -> str:
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return f"{self.path}:{self.line}: {self.rule}{sym} {self.message}"
+
+
+def sort_findings(findings: List[Finding]) -> List[Finding]:
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def format_table(findings: List[Finding],
+                 title: Optional[str] = None) -> str:
+    """Fixed-width findings table (the CLI read-out)."""
+    lines = []
+    if title:
+        lines.append(title)
+    if not findings:
+        lines.append("  (no findings)")
+        return "\n".join(lines)
+    for f in sort_findings(findings):
+        lines.append("  " + f.render())
+    return "\n".join(lines)
+
+
+def format_markdown(active: List[Finding], suppressed: List[Finding]) -> str:
+    """GitHub step-summary markdown: one table, active findings first."""
+    out = ["## repro.analysis findings",
+           "",
+           f"**{len(active)} active**, {len(suppressed)} baseline-suppressed",
+           ""]
+    if active or suppressed:
+        out += ["| status | rule | location | symbol | message |",
+                "|---|---|---|---|---|"]
+        for status, batch in (("ACTIVE", active), ("baseline", suppressed)):
+            for f in sort_findings(batch):
+                msg = f.message.replace("|", "\\|")
+                out.append(f"| {status} | {f.rule} | `{f.path}:{f.line}` | "
+                           f"`{f.symbol}` | {msg} |")
+    return "\n".join(out) + "\n"

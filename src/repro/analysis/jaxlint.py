@@ -1,0 +1,534 @@
+"""jaxlint: AST lint for JAX tracing / RNG discipline (rules J001-J004).
+
+Pure-AST, no imports of the linted code — the rules are heuristics tuned
+to this repo's idioms, each documented in docs/ANALYSIS.md:
+
+J001  PRNG key reuse. Within one function scope, a key variable (bound
+      from jax.random.PRNGKey/split/fold_in, or a parameter named like a
+      key) may be CONSUMED — passed as the key argument of any
+      jax.random.* call, split included — at most once per binding.
+      Reassignment (`key, sub = jax.random.split(key)`) starts a fresh
+      binding; consuming a key inside a loop that was bound outside the
+      loop fires too (every iteration would see the same stream). This
+      is exactly the split-before-double-use discipline the fit/serve
+      bit-identity contracts (PR 6/7) rely on.
+
+J002  Host sync inside traced code. In a jit- or Pallas-traced scope,
+      `.item()`, `.tolist()`, `np.asarray`/`np.array`, and
+      `float()/int()/bool()` over tracer-typed values force a device
+      sync (or fail outright under tracing) — each is a serving-path
+      stall at best.
+
+J003  Python branch on a tracer. `if`/`while`/`assert`/conditional
+      expressions whose test involves a tracer-typed value raise a
+      ConcretizationTypeError under jit. Shape-derived values
+      (`x.shape`, `len(x)`, `.ndim`, `.dtype`) and static args are
+      concrete and exempt, as are `x is None` identity checks.
+
+J004  Mutable static jit args. A parameter listed in `static_argnames`
+      that is annotated as a dict/list/set or a non-frozen dataclass
+      defined in the same module hashes by identity (or not at all):
+      every call constructs a new object and retraces. Frozen
+      dataclasses (the `ComputePolicy` pattern) are the positive
+      exemplar and pass.
+
+Tracedness inference is deliberately simple: non-static parameters are
+traced; an assignment whose right-hand side references a traced name is
+traced, UNLESS every such reference sits under a shape-like accessor
+(.shape/.ndim/.dtype/.size, len()). Module globals and closure values
+are assumed concrete. One textual forward pass — good enough for the
+kernel wrappers this repo writes, and every miss is baseline-able.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+# Attribute accesses that yield concrete (host) values even on tracers.
+_CONCRETE_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize"}
+
+# jax.random.* members that PRODUCE keys when assigned from.
+_KEY_PRODUCERS = {"PRNGKey", "key", "split", "fold_in", "clone"}
+
+# Parameter names seeded as key variables.
+def _is_key_param(name: str) -> bool:
+    return (name in ("key", "rng", "prng_key", "rng_key")
+            or name.endswith("_key") or name.endswith("_rng"))
+
+
+_MUTABLE_ANNOTATIONS = {"dict", "Dict", "defaultdict", "OrderedDict",
+                        "list", "List", "set", "Set", "bytearray"}
+
+
+class _ImportMap:
+    """Resolve names/attribute chains to dotted module paths."""
+
+    def __init__(self, tree: ast.Module):
+        self.alias: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.alias[a.asname or a.name.split(".")[0]] = \
+                        a.name if a.asname else a.name.split(".")[0]
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for a in node.names:
+                    self.alias[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Dotted path of a Name/Attribute chain, e.g. 'jax.random.normal'."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.alias.get(node.id, node.id)
+        return ".".join([root] + list(reversed(parts)))
+
+
+def _terminates(stmts: List[ast.stmt]) -> bool:
+    """True when a statement list unconditionally leaves the region."""
+    return bool(stmts) and isinstance(
+        stmts[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+def _normalize_random(dotted: Optional[str]) -> Optional[str]:
+    """'jax.random.normal' -> 'normal'; None when not a jax.random call."""
+    if dotted and dotted.startswith("jax.random."):
+        return dotted[len("jax.random."):]
+    return None
+
+
+# -- traced-scope discovery -------------------------------------------------
+
+def _decorator_jit_statics(dec: ast.expr, imports: _ImportMap
+                           ) -> Optional[Tuple[Set[str], Set[int]]]:
+    """If `dec` marks the function as jitted, its (static names, static
+    positional indices) — the caller maps indices onto parameter names."""
+    if imports.resolve(dec) == "jax.jit":
+        return set(), set()
+    if isinstance(dec, ast.Call):
+        target = imports.resolve(dec.func)
+        if target == "jax.jit":
+            return _static_names(dec)
+        if target == "functools.partial" and dec.args \
+                and imports.resolve(dec.args[0]) == "jax.jit":
+            return _static_names(dec)
+    return None
+
+
+def _static_names(call: ast.Call) -> Tuple[Set[str], Set[int]]:
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    for kw in call.keywords:
+        values: List[ast.expr] = []
+        if isinstance(kw.value, (ast.Tuple, ast.List)):
+            values = list(kw.value.elts)
+        elif isinstance(kw.value, ast.Constant):
+            values = [kw.value]
+        if kw.arg == "static_argnames":
+            names |= {e.value for e in values
+                      if isinstance(e, ast.Constant)
+                      and isinstance(e.value, str)}
+        elif kw.arg == "static_argnums":
+            nums |= {e.value for e in values
+                     if isinstance(e, ast.Constant)
+                     and isinstance(e.value, int)}
+    return names, nums
+
+
+def _pallas_kernel_names(tree: ast.Module, imports: _ImportMap) -> Set[str]:
+    """Function names passed (possibly via functools.partial) as the first
+    argument of a pallas_call anywhere in the module."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and imports.resolve(node.func)
+                in ("jax.experimental.pallas.pallas_call",)):
+            continue
+        if not node.args:
+            continue
+        body = node.args[0]
+        if isinstance(body, ast.Call) and imports.resolve(body.func) \
+                == "functools.partial" and body.args:
+            body = body.args[0]
+        if isinstance(body, ast.Name):
+            out.add(body.id)
+    return out
+
+
+# -- tracedness inference ---------------------------------------------------
+
+class _Tracedness:
+    """Forward-pass traced/concrete classification of local names."""
+
+    def __init__(self, fn: ast.FunctionDef, statics: Set[str],
+                 is_pallas_body: bool):
+        args = fn.args
+        params = [a.arg for a in args.posonlyargs + args.args
+                  + args.kwonlyargs]
+        if is_pallas_body:
+            # Pallas kernel bodies: refs and positional operands are
+            # traced; keyword-only params are bound via functools.partial
+            # with host values (the repo's kernel idiom) — static.
+            statics = statics | {a.arg for a in args.kwonlyargs}
+        self.traced: Set[str] = {p for p in params if p not in statics}
+        self._infer(fn)
+
+    def _infer(self, fn: ast.FunctionDef) -> None:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                self._bind(node.targets, self.is_traced(node.value))
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                self._bind([node.target], self.is_traced(node.value))
+            elif isinstance(node, ast.AugAssign):
+                if self.is_traced(node.value):
+                    self._bind([node.target], True)
+            elif isinstance(node, ast.For):
+                self._bind([node.target], self.is_traced(node.iter))
+
+    def _bind(self, targets: List[ast.expr], traced: bool) -> None:
+        for t in targets:
+            if isinstance(t, (ast.Tuple, ast.List)):
+                self._bind(list(t.elts), traced)
+            elif isinstance(t, ast.Name):
+                if traced:
+                    self.traced.add(t.id)
+                else:
+                    self.traced.discard(t.id)
+
+    def is_traced(self, node: ast.expr) -> bool:
+        """True when evaluating `node` could yield a tracer value."""
+        if isinstance(node, ast.Name):
+            return node.id in self.traced
+        if isinstance(node, ast.Attribute):
+            if node.attr in _CONCRETE_ATTRS:
+                return False
+            return self.is_traced(node.value)
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Name) and node.func.id == "len":
+                return False
+            # A method call on a traced receiver (x.sum()) is traced even
+            # with no arguments; shape-like accessors stay concrete via
+            # the Attribute case above.
+            return self.is_traced(node.func) or \
+                any(self.is_traced(a) for a in node.args) or \
+                any(self.is_traced(k.value) for k in node.keywords)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False                      # identity check, not value
+            return self.is_traced(node.left) or \
+                any(self.is_traced(c) for c in node.comparators)
+        if isinstance(node, ast.Subscript):
+            return self.is_traced(node.value)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_traced(node.left) or self.is_traced(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_traced(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_traced(v) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return any(self.is_traced(v)
+                       for v in (node.test, node.body, node.orelse))
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_traced(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.is_traced(node.value)
+        return False                              # constants, lambdas, ...
+
+
+# -- the lint pass ----------------------------------------------------------
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, tree: ast.Module, path: str):
+        self.path = path
+        self.imports = _ImportMap(tree)
+        self.pallas_bodies = _pallas_kernel_names(tree, self.imports)
+        self.findings: List[Finding] = []
+        self.dataclass_frozen: Dict[str, bool] = self._dataclasses(tree)
+        self._symbol: List[str] = []
+
+    # dataclass registry (for J004): name -> frozen?
+    def _dataclasses(self, tree: ast.Module) -> Dict[str, bool]:
+        out: Dict[str, bool] = {}
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for dec in node.decorator_list:
+                target = self.imports.resolve(
+                    dec.func if isinstance(dec, ast.Call) else dec)
+                if target in ("dataclasses.dataclass", "dataclass"):
+                    frozen = False
+                    if isinstance(dec, ast.Call):
+                        for kw in dec.keywords:
+                            if kw.arg == "frozen" and isinstance(
+                                    kw.value, ast.Constant):
+                                frozen = bool(kw.value.value)
+                    out[node.name] = frozen
+        return out
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            rule=rule, path=self.path, line=getattr(node, "lineno", 0),
+            symbol=".".join(self._symbol), message=message))
+
+    # -- traversal -------------------------------------------------------
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._symbol.append(node.name)
+        self.generic_visit(node)
+        self._symbol.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._symbol.append(node.name)
+        statics: Optional[Set[str]] = None
+        for dec in node.decorator_list:
+            s = _decorator_jit_statics(dec, self.imports)
+            if s is not None:
+                names, nums = s
+                params = [a.arg for a in
+                          node.args.posonlyargs + node.args.args]
+                statics = names | {params[i] for i in nums
+                                   if 0 <= i < len(params)}
+        is_pallas = node.name in self.pallas_bodies
+        if is_pallas and statics is None:
+            statics = set()
+        if statics is not None:
+            self._check_traced_scope(node, statics, is_pallas)
+            self._check_static_args(node, statics)
+        self._check_key_reuse(node)
+        self.generic_visit(node)
+        self._symbol.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    # -- J002 / J003 ------------------------------------------------------
+
+    def _check_traced_scope(self, fn: ast.FunctionDef, statics: Set[str],
+                            is_pallas: bool) -> None:
+        tr = _Tracedness(fn, statics, is_pallas)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.FunctionDef) and node is not fn:
+                continue                      # nested defs get their own scope
+            if isinstance(node, ast.Call):
+                self._check_host_sync(node, tr)
+            if isinstance(node, (ast.If, ast.While)) and \
+                    tr.is_traced(node.test):
+                self._emit("J003", node,
+                           "Python branch on a tracer-typed test inside a "
+                           "traced scope (use jnp.where / lax.cond, or "
+                           "mark the value static)")
+            if isinstance(node, ast.IfExp) and tr.is_traced(node.test):
+                self._emit("J003", node,
+                           "conditional expression on a tracer-typed test "
+                           "inside a traced scope")
+            if isinstance(node, ast.Assert) and tr.is_traced(node.test):
+                self._emit("J003", node,
+                           "assert on a tracer-typed value inside a "
+                           "traced scope")
+
+    def _check_host_sync(self, node: ast.Call, tr: _Tracedness) -> None:
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr in ("item", "tolist") and not node.args:
+            self._emit("J002", node,
+                       f".{node.func.attr}() inside a traced scope forces "
+                       f"a host sync (move it outside jit)")
+            return
+        dotted = self.imports.resolve(node.func)
+        if dotted in ("numpy.asarray", "numpy.array"):
+            self._emit("J002", node,
+                       f"{dotted}() inside a traced scope pulls the value "
+                       f"to host (use jnp, or hoist out of jit)")
+            return
+        if isinstance(node.func, ast.Name) and \
+                node.func.id in ("float", "int", "bool") and node.args \
+                and any(tr.is_traced(a) for a in node.args):
+            self._emit("J002", node,
+                       f"{node.func.id}() over a tracer-typed value inside "
+                       f"a traced scope (host sync / concretization)")
+
+    # -- J004 -------------------------------------------------------------
+
+    def _check_static_args(self, fn: ast.FunctionDef,
+                           statics: Set[str]) -> None:
+        args = fn.args
+        for a in args.posonlyargs + args.args + args.kwonlyargs:
+            if a.arg not in statics or a.annotation is None:
+                continue
+            ann = a.annotation
+            base = ann.value if isinstance(ann, ast.Subscript) else ann
+            name = base.id if isinstance(base, ast.Name) else (
+                base.attr if isinstance(base, ast.Attribute) else None)
+            if name in _MUTABLE_ANNOTATIONS:
+                self._emit("J004", a,
+                           f"static jit arg {a.arg!r} is annotated "
+                           f"{name} — unhashable/mutable statics retrace "
+                           f"on every call (pass a frozen dataclass, cf. "
+                           f"ComputePolicy)")
+            elif name in self.dataclass_frozen and \
+                    not self.dataclass_frozen[name]:
+                self._emit("J004", a,
+                           f"static jit arg {a.arg!r} is a non-frozen "
+                           f"dataclass {name} — identity hashing "
+                           f"recompiles per instance (declare "
+                           f"frozen=True, cf. ComputePolicy)")
+
+    # -- J001 -------------------------------------------------------------
+
+    def _check_key_reuse(self, fn: ast.FunctionDef) -> None:
+        # binding state: name -> (uses_since_binding, binding_loop_depth)
+        state: Dict[str, Tuple[int, int]] = {}
+        args = fn.args
+        for a in args.posonlyargs + args.args + args.kwonlyargs:
+            if _is_key_param(a.arg):
+                state[a.arg] = (0, 0)
+
+        def key_arg_names(call: ast.Call) -> List[ast.Name]:
+            """Names passed in the key slot of a jax.random.* call.
+
+            fold_in is exempt: fold_in(key, step) DERIVES a fresh
+            stream from (key, data) — the canonical per-iteration
+            pattern — so the folded key is not consumed by it.
+            """
+            member = _normalize_random(self.imports.resolve(call.func))
+            if member is None or member in ("key_data", "wrap_key_data",
+                                            "fold_in"):
+                return []
+            cands: List[ast.expr] = []
+            if call.args:
+                cands.append(call.args[0])
+            cands += [kw.value for kw in call.keywords if kw.arg == "key"]
+            return [c for c in cands if isinstance(c, ast.Name)]
+
+        def produces_key(value: ast.expr) -> bool:
+            return isinstance(value, ast.Call) and _normalize_random(
+                self.imports.resolve(value.func)) in _KEY_PRODUCERS
+
+        def bind(target: ast.expr, depth: int) -> None:
+            if isinstance(target, (ast.Tuple, ast.List)):
+                for e in target.elts:
+                    bind(e, depth)
+            elif isinstance(target, ast.Name):
+                state[target.id] = (0, depth)
+
+        def unbind(target: ast.expr) -> None:
+            if isinstance(target, (ast.Tuple, ast.List)):
+                for e in target.elts:
+                    unbind(e)
+            elif isinstance(target, ast.Name):
+                state.pop(target.id, None)
+
+        def scan(node: ast.AST, depth: int) -> None:
+            """Consumption pass over one expression/simple-statement tree."""
+            for sub in ast.walk(node):
+                if not isinstance(sub, ast.Call):
+                    continue
+                for name in key_arg_names(sub):
+                    if name.id not in state:
+                        continue
+                    uses, bound_at = state[name.id]
+                    if uses >= 1:
+                        self._emit(
+                            "J001", sub,
+                            f"PRNG key {name.id!r} consumed again without "
+                            f"a fresh jax.random.split")
+                    elif depth > bound_at:
+                        self._emit(
+                            "J001", sub,
+                            f"PRNG key {name.id!r} bound outside the loop "
+                            f"is consumed every iteration — split per "
+                            f"iteration")
+                    state[name.id] = (uses + 1, bound_at)
+
+        def walk(stmts: List[ast.stmt], depth: int) -> None:
+            for st in stmts:
+                if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                    continue                    # nested scopes lint themselves
+                if isinstance(st, ast.For):
+                    scan(st.iter, depth)
+                    walk(st.body, depth + 1)
+                    walk(st.orelse, depth + 1)
+                elif isinstance(st, ast.While):
+                    scan(st.test, depth + 1)    # re-evaluated per iteration
+                    walk(st.body, depth + 1)
+                    walk(st.orelse, depth + 1)
+                elif isinstance(st, ast.If):
+                    # The branches are exclusive at runtime: walk each
+                    # from the same pre-If state, then continue with the
+                    # per-key worst case of the branches that can fall
+                    # through (a branch ending in return/raise/continue/
+                    # break contributes nothing downstream). Double use
+                    # split across `if`/`else` is NOT reuse.
+                    scan(st.test, depth)
+                    pre = dict(state)
+                    walk(st.body, depth)
+                    body_state = dict(state)
+                    state.clear()
+                    state.update(pre)
+                    walk(st.orelse, depth)
+                    orelse_state = dict(state)
+                    survivors = [s for s, stmts in
+                                 ((body_state, st.body),
+                                  (orelse_state, st.orelse))
+                                 if not _terminates(stmts)] or [pre]
+                    state.clear()
+                    for branch in survivors:
+                        for name, (uses, bound_at) in branch.items():
+                            if name in state:
+                                pu, pd = state[name]
+                                state[name] = (max(pu, uses),
+                                               min(pd, bound_at))
+                            else:
+                                state[name] = (uses, bound_at)
+                elif isinstance(st, ast.With):
+                    for item in st.items:
+                        scan(item.context_expr, depth)
+                    walk(st.body, depth)
+                elif isinstance(st, ast.Try):
+                    walk(st.body, depth)
+                    for h in st.handlers:
+                        walk(h.body, depth)
+                    walk(st.orelse, depth)
+                    walk(st.finalbody, depth)
+                else:
+                    # Simple statement: consume first (the RHS evaluates
+                    # before the bind), then apply (re)bindings.
+                    scan(st, depth)
+                    if isinstance(st, ast.Assign):
+                        for t in st.targets:
+                            if produces_key(st.value):
+                                bind(t, depth)
+                            else:
+                                unbind(t)
+                    elif isinstance(st, ast.AnnAssign) and \
+                            st.value is not None:
+                        if produces_key(st.value):
+                            bind(st.target, depth)
+                        else:
+                            unbind(st.target)
+
+        walk(fn.body, 0)
+
+    # Module-level statements are visited by generic_visit; key reuse at
+    # module scope is rare and intentionally unchecked.
+
+
+def lint_source(source: str, path: str) -> List[Finding]:
+    """Run jaxlint over one file's source; `path` only labels findings."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [Finding(rule="X001", path=path, line=exc.lineno or 0,
+                        symbol="", message=f"file does not parse: {exc}")]
+    linter = _Linter(tree, path)
+    linter.visit(tree)
+    return linter.findings
+
+
+def lint_file(filename: str, repo_rel: str) -> List[Finding]:
+    with open(filename, "r", encoding="utf-8") as fh:
+        return lint_source(fh.read(), repo_rel)

@@ -251,14 +251,18 @@ def randomized_eig_with_state(key: jax.Array, kernel: KernelFn,
     if sketch_type == "srht":
         sketch = make_srht(key, n, r_prime)
         W = sketch_stream(kernel, X, sketch, block, fwht_fn)
-        omega_t_q = lambda Q: srht_apply_t(sketch, Q, fwht_fn)
+
+        def omega_t_q(Q):
+            return srht_apply_t(sketch, Q, fwht_fn)
     elif sketch_type == "gaussian":
         sketch = make_gaussian(key, n, r_prime)
         W = jnp.zeros((n, r_prime), jnp.float32)
         for start, stripe in stripe_iterator(kernel, X, block):
             W = jax.lax.dynamic_update_slice(
                 W, stripe.T @ sketch.omega, (start, 0))  # rows = stripe^T Om
-        omega_t_q = lambda Q: sketch.omega.T @ Q
+
+        def omega_t_q(Q):
+            return sketch.omega.T @ Q
     else:
         raise ValueError(f"unknown sketch_type {sketch_type!r}")
     if truncate_basis:

@@ -44,13 +44,13 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any,
     tmp = base / f"step_{step}.tmp"
     final = base / f"step_{step}"
     leaves, treedef = jax.tree.flatten(state)
-    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+    host_leaves = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
     manifest = {
         "step": step,
         "time": time.time(),
         "paths": _tree_paths(state),
-        "shapes": [list(l.shape) for l in host_leaves],
-        "dtypes": [str(l.dtype) for l in host_leaves],
+        "shapes": [list(leaf.shape) for leaf in host_leaves],
+        "dtypes": [str(leaf.dtype) for leaf in host_leaves],
         "treedef": str(treedef),
     }
 

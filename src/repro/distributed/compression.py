@@ -25,9 +25,9 @@ from repro.core.sketch import fwht, next_pow2
 
 def _flatten(tree) -> Tuple[jnp.ndarray, Any, list]:
     leaves, treedef = jax.tree.flatten(tree)
-    vec = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
-                           for l in leaves])
-    return vec, treedef, [(l.shape, l.dtype) for l in leaves]
+    vec = jnp.concatenate([leaf.reshape(-1).astype(jnp.float32)
+                           for leaf in leaves])
+    return vec, treedef, [(leaf.shape, leaf.dtype) for leaf in leaves]
 
 
 def _unflatten(vec, treedef, metas):
@@ -99,7 +99,7 @@ def make_sketched_grad_transform(params_like, r_prime: int,
 
 
 def compression_ratio(params_like, r_prime: int) -> float:
-    n = sum(l.size for l in jax.tree.leaves(params_like))
+    n = sum(leaf.size for leaf in jax.tree.leaves(params_like))
     return n / r_prime
 
 

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 
 from repro.kernels.extend_embed.extend_embed import extend_embed_call
 from repro.kernels.extend_embed.ref import extend_embed_ref
-from repro.kernels.registry import KernelEntry, register_kernel
+from repro.kernels.registry import (KernelContract, KernelEntry,
+                                    register_contract, register_kernel)
 
 
 def _is_cpu() -> bool:
@@ -39,6 +40,25 @@ def padded_shapes(n: int, r: int, w: int, row_tile: int = 256
     r_pad = -(-r // 8) * 8
     w_pad = -(-w // 128) * 128
     return row_tile, n_pad, r_pad, w_pad
+
+
+def memory_contract(p: int, n: int, r: int, w: int, row_tile: int = 256
+                    ) -> dict:
+    """Declared HBM byte model for one fused serving stripe.
+
+    X and P stream over the row-tile grid (each padded element crosses
+    HBM once); the query block Xb and the (r, w) output stay
+    VMEM-resident across the whole sweep and cross once each. These are
+    the bytes serve/bench.py reports, cross-checked against the
+    BlockSpecs by `repro.analysis` (rule C001).
+    """
+    row_tile, n_pad, r_pad, w_pad = padded_shapes(n, r, w, row_tile)
+    hbm = 4.0 * (p * n_pad             # X (p, n_pad) streamed
+                 + r_pad * n_pad       # P streamed
+                 + p * w_pad           # Xb query block, resident
+                 + r_pad * w_pad)      # embedded out, resident
+    return {"row_tile": row_tile, "n_pad": n_pad, "r_pad": r_pad,
+            "w_pad": w_pad, "hbm_bytes": hbm}
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "gamma", "degree",
@@ -90,3 +110,11 @@ register_kernel(KernelEntry(
          "gamma": 1.0, "degree": 3},
     ),
     build=_extend_embed_build, rtol=2e-3, atol=2e-3))
+
+
+def _extend_embed_declared(case: dict) -> dict:
+    return memory_contract(case["p"], case["n"], case["r"], case["w"])
+
+
+register_contract(KernelContract(name="extend_embed",
+                                 declared=_extend_embed_declared))

@@ -81,19 +81,19 @@ def _fit_sketch_kernel(xi_ref, oi_ref, xb_ref, ocr_ref, vi_ref,
         rnr_ref.dtype)                               # (bm, 128) per tile
 
 
-def fit_sketch_call(X: jnp.ndarray, O: jnp.ndarray, C: jnp.ndarray,
+def fit_sketch_call(X: jnp.ndarray, Omega: jnp.ndarray, C: jnp.ndarray,
                     Ocross: jnp.ndarray, V: jnp.ndarray, kind: str,
                     gamma: float, degree: int, b_real: int, row_tile: int,
                     interpret: bool):
     """All four fit contractions of kappa(X, C); m % row_tile == 0.
 
-    X (p, m), O (m, rp), C (p, w), Ocross (w, rp), V (8, m) ->
+    X (p, m), Omega (m, rp), C (p, w), Ocross (w, rp), V (8, m) ->
     acc (w, rp), delta (m, rp), rn_row (m, 128), rn_col (8, w);
     b_real = count of real (unpadded) block columns, for the static
     rn_row column mask.
     """
     p, m = X.shape
-    rp = O.shape[1]
+    rp = Omega.shape[1]
     w = C.shape[1]
     return pl.pallas_call(
         functools.partial(_fit_sketch_kernel, kind=kind, gamma=gamma,
@@ -119,4 +119,4 @@ def fit_sketch_call(X: jnp.ndarray, O: jnp.ndarray, C: jnp.ndarray,
             pl.BlockSpec((8, w), lambda i: (0, 0)),
         ),
         interpret=interpret,
-    )(X, O, C, Ocross, V)
+    )(X, Omega, C, Ocross, V)

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 
 from repro.kernels.fit_sketch.fit_sketch import fit_sketch_call
 from repro.kernels.fit_sketch.ref import fit_sketch_ref
-from repro.kernels.registry import KernelEntry, register_kernel
+from repro.kernels.registry import (KernelContract, KernelEntry,
+                                    register_contract, register_kernel)
 
 
 def _is_cpu() -> bool:
@@ -42,35 +43,60 @@ def padded_shapes(m: int, b: int, rp: int, row_tile: int = 256
     return row_tile, m_pad, b_pad, rp_pad
 
 
+def memory_contract(p: int, m: int, b: int, rp: int, row_tile: int = 256
+                    ) -> dict:
+    """Declared HBM byte model for one fused fit-block call.
+
+    Every operand block crosses HBM exactly once per distinct grid
+    coordinate (moving operands stream, constant-index operands stay
+    VMEM-resident), so the f32 traffic is the sum of the padded operand
+    footprints. serve/bench.py reports THESE numbers and
+    `repro.analysis` cross-checks them against the kernel's BlockSpecs
+    at every registered parity case (rule C001).
+    """
+    row_tile, m_pad, b_pad, rp_pad = padded_shapes(m, b, rp, row_tile)
+    hbm = 4.0 * (p * m_pad             # X (p, m_pad) streamed
+                 + m_pad * rp_pad      # Omega rows streamed
+                 + p * b_pad           # C block, resident
+                 + b_pad * rp_pad      # Ocross, resident
+                 + 8 * m_pad           # V validity mask, streamed
+                 + b_pad * rp_pad      # new_rows accumulator, resident
+                 + m_pad * rp_pad      # delta out, streamed
+                 + m_pad * 128         # row-norm out, streamed
+                 + 8 * b_pad)          # col-norm out, resident
+    return {"row_tile": row_tile, "m_pad": m_pad, "b_pad": b_pad,
+            "rp_pad": rp_pad, "hbm_bytes": hbm}
+
+
 @functools.partial(jax.jit, static_argnames=("kind", "gamma", "degree",
                                              "row_tile", "interpret"))
-def fit_sketch_pallas(X: jnp.ndarray, O: jnp.ndarray, C: jnp.ndarray,
+def fit_sketch_pallas(X: jnp.ndarray, Omega: jnp.ndarray, C: jnp.ndarray,
                       Ocross: jnp.ndarray, V: jnp.ndarray | None = None,
                       kind: str = "polynomial", gamma: float = 0.0,
                       degree: int = 2, row_tile: int = 256,
                       interpret: bool | None = None):
     """Fused fit-block contractions of K = kappa(X, C), one executable.
 
-    X (p, m) samples as columns, O (m, r') sketch rows (callers zero the
-    rows of invalid/garbage X columns — that zeroing is what makes the
-    padding exact), C (p, b) block columns, Ocross (b, r') the block's
-    own sketch rows, V (8, m) optional row-validity mask in row 0
-    (None = all m rows valid). Returns
+    X (p, m) samples as columns, Omega (m, r') sketch rows (callers zero
+    the rows of invalid/garbage X columns — that zeroing is what makes
+    the padding exact), C (p, b) block columns, Ocross (b, r') the
+    block's own sketch rows, V (8, m) optional row-validity mask in row
+    0 (None = all m rows valid). Returns
       (new_rows (b, r'), delta (m, r'), rn_rows (m,), rn_cols (b,))
     matching fit_sketch_ref. Pads m to the row tile, b and r' to 128
-    lanes; padded O/Ocross rows are zero and padded V columns are zero,
-    so every padded contribution is annihilated (exact, not
+    lanes; padded Omega/Ocross rows are zero and padded V columns are
+    zero, so every padded contribution is annihilated (exact, not
     approximate), and padded output rows/columns are sliced off.
     """
     interp = _is_cpu() if interpret is None else interpret
     m = X.shape[1]
     b = C.shape[1]
-    rp = O.shape[1]
+    rp = Omega.shape[1]
     row_tile, _, _, _ = padded_shapes(m, b, rp, row_tile)
     if V is None:
         V = jnp.zeros((8, m), jnp.float32).at[0].set(1.0)
     Xp = _pad_to(X, 1, row_tile)
-    Op = _pad_to(_pad_to(O, 0, row_tile), 1, 128)
+    Op = _pad_to(_pad_to(Omega, 0, row_tile), 1, 128)
     Cp = _pad_to(C, 1, 128)
     Ocrp = _pad_to(_pad_to(Ocross, 0, 128), 1, 128)
     Vp = _pad_to(V, 1, row_tile)
@@ -84,17 +110,17 @@ def _fit_sketch_build(key, case):
     p, m, b, rp = case["p"], case["m"], case["b"], case["rp"]
     k1, k2, k3, k4 = jax.random.split(key, 4)
     X = jax.random.normal(k1, (p, m), jnp.float32)
-    O = jax.random.normal(k2, (m, rp), jnp.float32)
+    Omega = jax.random.normal(k2, (m, rp), jnp.float32)
     C = jax.random.normal(k3, (p, b), jnp.float32)
     Ocr = jax.random.normal(k4, (b, rp), jnp.float32)
     valid = case.get("valid", m)
     if valid < m:
-        # Mirror the fit caller's contract: O rows of invalid columns
-        # are zeroed, V masks them out of the column norms.
-        O = O.at[valid:].set(0.0)
+        # Mirror the fit caller's contract: Omega rows of invalid
+        # columns are zeroed, V masks them out of the column norms.
+        Omega = Omega.at[valid:].set(0.0)
     V = jnp.zeros((8, m), jnp.float32).at[0, :valid].set(1.0)
     kw = {k: case[k] for k in ("kind", "gamma", "degree") if k in case}
-    return (X, O, C, Ocr, V), kw, kw
+    return (X, Omega, C, Ocr, V), kw, kw
 
 
 register_kernel(KernelEntry(
@@ -109,3 +135,11 @@ register_kernel(KernelEntry(
          "gamma": 1.0, "degree": 3, "valid": 123},
     ),
     build=_fit_sketch_build, rtol=2e-3, atol=2e-3))
+
+
+def _fit_sketch_declared(case: dict) -> dict:
+    return memory_contract(case["p"], case["m"], case["b"], case["rp"])
+
+
+register_contract(KernelContract(name="fit_sketch",
+                                 declared=_fit_sketch_declared))

@@ -4,15 +4,15 @@ import jax.numpy as jnp
 from repro.kernels.gram.ref import gram_stripe_ref
 
 
-def fit_sketch_ref(X: jnp.ndarray, O: jnp.ndarray, C: jnp.ndarray,
+def fit_sketch_ref(X: jnp.ndarray, Omega: jnp.ndarray, C: jnp.ndarray,
                    Ocross: jnp.ndarray, V: jnp.ndarray = None,
                    kind: str = "polynomial", gamma: float = 0.0,
                    degree: int = 2):
     """All four contractions of K = kappa(X, C) the fit update consumes.
 
-    X (p, m), O (m, r'), C (p, b), Ocross (b, r'), V (8, m) row 0 the
-    row-validity mask (None = all valid). Returns
-      new_rows (b, r') = K^T O        (the b new sketch rows)
+    X (p, m), Omega (m, r'), C (p, b), Ocross (b, r'), V (8, m) row 0
+    the row-validity mask (None = all valid). Returns
+      new_rows (b, r') = K^T Omega    (the b new sketch rows)
       delta    (m, r') = K Ocross     (cross-term update, caller masks)
       rn_rows  (m,)    = row sums of K*K
       rn_cols  (b,)    = V-masked column sums of K*K
@@ -20,7 +20,7 @@ def fit_sketch_ref(X: jnp.ndarray, O: jnp.ndarray, C: jnp.ndarray,
     K = gram_stripe_ref(X, C, kind=kind, gamma=gamma, degree=degree)
     vm = (jnp.ones((X.shape[1],), jnp.float32) if V is None
           else V[0].astype(jnp.float32))
-    new_rows = K.T @ O
+    new_rows = K.T @ Omega
     delta = K @ Ocross
     rn_rows = jnp.sum(K * K, axis=1)
     rn_cols = vm @ (K * K)

@@ -15,11 +15,34 @@ import jax.numpy as jnp
 
 from repro.kernels.fwht.fwht import fwht_1level
 from repro.kernels.fwht.ref import fwht_ref
-from repro.kernels.registry import KernelEntry, register_kernel
+from repro.kernels.registry import (KernelContract, KernelEntry,
+                                    register_contract, register_kernel)
 
 # Max rows for a single-level slab: 2^13 x 128 lanes x 4B = 4 MiB of VMEM
 # (input + stacked temporaries stay < 16 MiB).
 _MAX_SINGLE = 1 << 13
+
+
+def sweep_shapes(n: int, c: int) -> tuple:
+    """The (rows, cols) slab per fwht_1level sweep fwht_pallas issues —
+    one slab for n <= _MAX_SINGLE, else the two-level factorization."""
+    if n <= _MAX_SINGLE:
+        return ((n, c),)
+    b = _MAX_SINGLE
+    return ((b, (n // b) * c), (n // b, b * c))
+
+
+def memory_contract(n: int, c: int, col_tile: int = 128) -> dict:
+    """Declared HBM byte model: each sweep reads + writes its padded
+    slab exactly once — the fused-stage schedule's whole perf argument
+    (the naive pay-per-stage schedule is log2(n)x more). Cross-checked
+    against fwht_1level's BlockSpecs by `repro.analysis` (rule C001)."""
+    hbm = 0.0
+    for rows, cols in sweep_shapes(n, c):
+        ct = min(col_tile, cols)
+        cp = -(-cols // ct) * ct
+        hbm += 2 * 4.0 * rows * cp
+    return {"sweeps": sweep_shapes(n, c), "hbm_bytes": hbm}
 
 
 def _is_cpu() -> bool:
@@ -62,3 +85,10 @@ register_kernel(KernelEntry(
     cases=({"n": 8, "c": 3}, {"n": 512, "c": 128}, {"n": 4096, "c": 1},
            {"n": 1 << 14, "c": 2}),
     build=_fwht_build, rtol=2e-4, atol=2e-4))
+
+
+def _fwht_declared(case: dict) -> dict:
+    return memory_contract(case["n"], case["c"])
+
+
+register_contract(KernelContract(name="fwht", declared=_fwht_declared))

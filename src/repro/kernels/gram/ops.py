@@ -8,7 +8,8 @@ import jax.numpy as jnp
 
 from repro.kernels.gram.gram import gram_stripe_call
 from repro.kernels.gram.ref import gram_stripe_ref
-from repro.kernels.registry import KernelEntry, register_kernel
+from repro.kernels.registry import (KernelContract, KernelEntry,
+                                    register_contract, register_kernel)
 
 
 def _is_cpu() -> bool:
@@ -23,6 +24,30 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     pads = [(0, 0)] * x.ndim
     pads[axis] = (0, mult - rem)
     return jnp.pad(x, pads)
+
+
+def padded_shapes(n: int, w: int, row_tile: int = 256
+                  ) -> tuple[int, int, int]:
+    """(row_tile, n_pad, w_pad) the kernel actually runs at — the single
+    source of truth for the tiling (gram_stripe_pallas pads with exactly
+    these values; memory_contract derives the byte model from them)."""
+    row_tile = min(row_tile, max(128, 1 << (n - 1).bit_length()))
+    n_pad = -(-n // row_tile) * row_tile
+    w_pad = -(-w // 128) * 128
+    return row_tile, n_pad, w_pad
+
+
+def memory_contract(p: int, n: int, w: int, row_tile: int = 256) -> dict:
+    """Declared HBM byte model for one gram stripe: X streams over the
+    row-tile grid, the query block Xb stays VMEM-resident, and the
+    (n_pad, w_pad) stripe is written out tile by tile. Cross-checked
+    against the BlockSpecs by `repro.analysis` (rule C001)."""
+    row_tile, n_pad, w_pad = padded_shapes(n, w, row_tile)
+    hbm = 4.0 * (p * n_pad             # X (p, n_pad) streamed
+                 + p * w_pad           # Xb query block, resident
+                 + n_pad * w_pad)      # stripe out, streamed
+    return {"row_tile": row_tile, "n_pad": n_pad, "w_pad": w_pad,
+            "hbm_bytes": hbm}
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "gamma", "degree",
@@ -41,7 +66,7 @@ def gram_stripe_pallas(X: jnp.ndarray, Xb: jnp.ndarray,
     interp = _is_cpu() if interpret is None else interpret
     p, n = X.shape
     w = Xb.shape[1]
-    row_tile = min(row_tile, max(128, 1 << (n - 1).bit_length()))
+    row_tile, _, _ = padded_shapes(n, w, row_tile)
     Xp = _pad_to(X, 1, row_tile)
     Xbp = _pad_to(Xb, 1, 128)
     out = gram_stripe_call(Xp, Xbp, kind, gamma, degree, row_tile, interp)
@@ -66,3 +91,11 @@ register_kernel(KernelEntry(
         {"p": 3, "n": 97, "w": 1, "kind": "linear"},
     ),
     build=_gram_build, rtol=2e-3, atol=2e-3))
+
+
+def _gram_declared(case: dict) -> dict:
+    return memory_contract(case["p"], case["n"], case["w"])
+
+
+register_contract(KernelContract(name="gram_stripe",
+                                 declared=_gram_declared))

@@ -10,11 +10,39 @@ import numpy as np
 
 from repro.kernels.kmeans_assign.kmeans_assign import assign_call
 from repro.kernels.kmeans_assign.ref import assign_ref
-from repro.kernels.registry import KernelEntry, register_kernel
+from repro.kernels.registry import (KernelContract, KernelEntry,
+                                    register_contract, register_kernel)
 
 
 def _is_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def padded_shapes(n: int, r: int, k: int, row_tile: int = 512
+                  ) -> tuple[int, int, int, int]:
+    """(row_tile, n_pad, r_pad, k_pad) the kernel actually runs at — the
+    single source of truth for the tiling (assign_pallas pads with
+    exactly these values; memory_contract derives bytes from them)."""
+    row_tile = min(row_tile, max(8, 1 << (n - 1).bit_length()))
+    n_pad = -(-n // row_tile) * row_tile
+    r_pad = -(-r // 128) * 128
+    k_pad = -(-k // 8) * 8
+    return row_tile, n_pad, r_pad, k_pad
+
+
+def memory_contract(n: int, r: int, k: int, row_tile: int = 512) -> dict:
+    """Declared HBM byte model for one fused assignment sweep: Y streams
+    over the row-tile grid, the centroids stay VMEM-resident, and only
+    the two (n,) outputs come back — the (n, k) distance matrix never
+    leaves VMEM. Cross-checked against the BlockSpecs by
+    `repro.analysis` (rule C001)."""
+    row_tile, n_pad, r_pad, k_pad = padded_shapes(n, r, k, row_tile)
+    hbm = 4.0 * (n_pad * r_pad         # Y streamed
+                 + k_pad * r_pad       # centroids, resident
+                 + n_pad               # labels out (int32)
+                 + n_pad)              # min-d2 out (f32)
+    return {"row_tile": row_tile, "n_pad": n_pad, "r_pad": r_pad,
+            "k_pad": k_pad, "hbm_bytes": hbm}
 
 
 @functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
@@ -28,10 +56,7 @@ def assign_pallas(Y: jnp.ndarray, C: jnp.ndarray, row_tile: int = 512,
     interp = _is_cpu() if interpret is None else interpret
     n, r = Y.shape
     k = C.shape[0]
-    row_tile = min(row_tile, max(8, 1 << (n - 1).bit_length()))
-    n_pad = -(-n // row_tile) * row_tile
-    r_pad = -(-r // 128) * 128
-    k_pad = -(-k // 8) * 8
+    row_tile, n_pad, r_pad, k_pad = padded_shapes(n, r, k, row_tile)
     Yp = jnp.pad(Y, ((0, n_pad - n), (0, r_pad - r)))
     Cp = jnp.pad(C, ((0, k_pad - k), (0, r_pad - r)))
     labels, d2 = assign_call(Yp, Cp, k, row_tile, interp)
@@ -59,3 +84,11 @@ register_kernel(KernelEntry(
            {"n": 513, "r": 16, "k": 100}, {"n": 31, "r": 5, "k": 3}),
     build=_assign_build, rtol=1e-4, atol=1e-4,
     compare=_assign_compare))
+
+
+def _assign_declared(case: dict) -> dict:
+    return memory_contract(case["n"], case["r"], case["k"])
+
+
+register_contract(KernelContract(name="kmeans_assign",
+                                 declared=_assign_declared))

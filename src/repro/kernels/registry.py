@@ -41,7 +41,25 @@ class KernelEntry(NamedTuple):
     compare: Optional[Callable] = None
 
 
+class KernelContract(NamedTuple):
+    """One kernel package's declared memory-contract model.
+
+    declared: (case) -> dict with at least "hbm_bytes": the closed-form
+           byte model for one parity case — the number serve/bench.py
+           reports. `repro.analysis` cross-checks it against the HBM
+           traffic derived from the kernel's actual BlockSpecs at every
+           registered case, so the model cannot silently drift from the
+           kernel (rule C001).
+    vmem_budget: per-grid-step VMEM residency ceiling in bytes the
+           kernel must stay under at every registered case (rule C002).
+    """
+    name: str
+    declared: Callable
+    vmem_budget: int = 16 * 1024 * 1024
+
+
 _REGISTRY: Dict[str, KernelEntry] = {}
+_CONTRACTS: Dict[str, KernelContract] = {}
 
 
 def register_kernel(entry: KernelEntry) -> KernelEntry:
@@ -69,3 +87,16 @@ def registered_kernels() -> list:
 def kernel_entries() -> Tuple[KernelEntry, ...]:
     """All entries, name-sorted — what the parity sweep iterates."""
     return tuple(_REGISTRY[n] for n in registered_kernels())
+
+
+def register_contract(contract: KernelContract) -> KernelContract:
+    """Register one package's memory contract (same replace semantics
+    as register_kernel)."""
+    _CONTRACTS[contract.name] = contract
+    return contract
+
+
+def get_contract(name: str) -> Optional[KernelContract]:
+    """The declared contract for `name`, or None — `repro.analysis`
+    reports a missing contract as C003 rather than raising here."""
+    return _CONTRACTS.get(name)

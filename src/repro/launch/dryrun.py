@@ -64,9 +64,9 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
     B, S = sh["batch"], sh["seq"]
     api = get_api(cfg)
     key = jax.random.PRNGKey(0)
-    ns = lambda spec: jax.tree.map(
-        lambda p: NamedSharding(mesh, p), spec,
-        is_leaf=lambda x: isinstance(x, P))
+    def ns(spec):
+        return jax.tree.map(lambda p: NamedSharding(mesh, p), spec,
+                            is_leaf=lambda x: isinstance(x, P))
     groups = dp_total if (B % dp_total == 0 and B * min(S, 1) >= 0) else 1
     if B % dp_total != 0:
         groups = 1

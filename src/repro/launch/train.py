@@ -57,8 +57,9 @@ def main():
     state = tsteps.init_train_state(key, cfg, api, tp=tp)
     state_spec = shd.state_pspecs(jax.eval_shape(
         lambda: tsteps.init_train_state(key, cfg, api, tp=tp)), mesh)
-    ns = lambda spec: jax.tree.map(lambda p: NamedSharding(mesh, p), spec,
-                                   is_leaf=lambda q: isinstance(q, P))
+    def ns(spec):
+        return jax.tree.map(lambda p: NamedSharding(mesh, p), spec,
+                            is_leaf=lambda q: isinstance(q, P))
     state = jax.device_put(state, ns(state_spec))
 
     grad_transform = None

@@ -87,8 +87,10 @@ def _wkv_chunked(r, k, v, logw, u, state0, chunk=_CHUNK):
     Lc = min(chunk, S)
     assert S % Lc == 0, f"seq {S} not divisible by chunk {Lc}"
     nC = S // Lc
-    # -> (nC, B, H, Lc, dh)
-    resh = lambda x: x.reshape(B, nC, Lc, H, dh).transpose(1, 0, 3, 2, 4)
+    def resh(x):
+        # -> (nC, B, H, Lc, dh)
+        return x.reshape(B, nC, Lc, H, dh).transpose(1, 0, 3, 2, 4)
+
     r, k, v, logw = resh(r), resh(k), resh(v), resh(logw)
 
     def chunk(state, xs):
@@ -145,7 +147,10 @@ def _time_mix(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
     # A clamped channel still decays to e^-60 within one chunk — fully
     # forgotten — so the recurrence semantics are unchanged in practice.
     logw = jnp.maximum(logw, -60.0 / max(cfg.rwkv_chunk, 1))
-    to_h = lambda t: _heads(t.astype(jnp.float32), H)
+
+    def to_h(t):
+        return _heads(t.astype(jnp.float32), H)
+
     u = p["u"].reshape(H, cfg.rwkv_head_dim)
     out, state = _wkv_chunked(to_h(r), to_h(k), to_h(v), _heads(logw, H),
                               u, state0, chunk=cfg.rwkv_chunk)

@@ -332,9 +332,10 @@ def _stripe_hbm_traffic(model: FittedModel, width: int) -> Dict:
         jax.ShapeDtypeStruct((n, width), f32)).compile().as_text()
     two_pass = (analyze(gram_txt)["traffic_bytes"] +
                 analyze(proj_txt)["traffic_bytes"])
-    from repro.kernels.extend_embed.ops import padded_shapes
-    _, n_pad, r_pad, w_pad = padded_shapes(n, r, width)
-    fused = 4.0 * (p * n_pad + r_pad * n_pad + p * w_pad + r_pad * w_pad)
+    # Single source of truth: the kernel package's own declared model,
+    # which repro.analysis cross-checks against the BlockSpecs (C001).
+    from repro.kernels.extend_embed.ops import memory_contract
+    fused = memory_contract(p, n, r, width)["hbm_bytes"]
     return {
         "two_pass_bytes": float(two_pass),
         "two_pass_source": "launch.hlo_analysis over gram + projection "
@@ -664,7 +665,7 @@ def _fit_block_traffic(model: FittedModel, n: int, block: int) -> Dict:
     the roofline ratio is therefore a floor for the canonical path).
     """
     from repro.core.sketch import fwht
-    from repro.kernels.fit_sketch.ops import padded_shapes
+    from repro.kernels.fit_sketch.ops import memory_contract
     from repro.launch.hlo_analysis import analyze
 
     spec = model.spec
@@ -686,11 +687,9 @@ def _fit_block_traffic(model: FittedModel, n: int, block: int) -> Dict:
     parts = [analyze(t) for t in texts]
     two_pass = sum(a["traffic_bytes"] for a in parts)
     flops = sum(a["flops"] for a in parts)
-    row_tile, m_pad, b_pad, rp_pad = padded_shapes(n, b, rp)
-    fused = 4.0 * (p * m_pad + m_pad * rp_pad + p * b_pad +
-                   b_pad * rp_pad + 8 * m_pad +          # X, O, C, Ocr, V
-                   b_pad * rp_pad + m_pad * rp_pad +     # acc, delta
-                   m_pad * 128 + 8 * b_pad)              # rn ledgers
+    # Single source of truth: the kernel package's own declared model,
+    # which repro.analysis cross-checks against the BlockSpecs (C001).
+    fused = memory_contract(p, n, b, rp)["hbm_bytes"]
     return {
         "two_pass_bytes": float(two_pass),
         "two_pass_source": "launch.hlo_analysis over gram + fwht + "

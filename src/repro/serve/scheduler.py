@@ -85,12 +85,19 @@ class AsyncBatcher:
         self.clock = clock
         self.latency = latency if latency is not None \
             else LatencyStats(slo_ms=slo_ms)
-        self._queue: List[_Pending] = []
+        # lock-order: _flush_lock -> _lock
+        # flush() nests the window lock inside the drain lock; nothing
+        # may acquire the pair inverted (taking _flush_lock while
+        # holding _lock would deadlock against a concurrent flush).
+        # repro.analysis reads this contract and the guarded-by
+        # annotations below; mutations of annotated fields outside
+        # `with self._lock` are build failures (rules L001/L002).
+        self._queue: List[_Pending] = []      # guarded-by: _lock
         self._lock = threading.Lock()         # guards the pending window
         self._flush_lock = threading.Lock()   # serializes inner drains
-        self._thread: Optional[threading.Thread] = None
+        self._thread: Optional[threading.Thread] = None  # guarded-by: _lock
         self._stop_event = threading.Event()
-        self._stopped = False
+        self._stopped = False                 # guarded-by: _lock
         # Pump-thread health: a flush that raises has already delivered
         # the exception to that batch's futures; the pump must survive to
         # serve later requests. Counter + last error are the monitoring
@@ -234,12 +241,12 @@ class AsyncBatcher:
         return self._stopped
 
     def start(self) -> "AsyncBatcher":
-        """Spawn the daemon pump thread (poll() every max_wait_ms / 4)."""
-        if self._stopped:
-            raise RuntimeError("cannot start a stopped AsyncBatcher")
-        if self._thread is not None:
-            raise RuntimeError("pump thread already running")
-        self._stop_event.clear()
+        """Spawn the daemon pump thread (poll() every max_wait_ms / 4).
+
+        The check-and-spawn is one critical section: two concurrent
+        start() calls must not both see `_thread is None` and leak a
+        second pump.
+        """
 
         def pump():
             period = max(self.max_wait_ms / 4e3, 1e-4)
@@ -250,22 +257,35 @@ class AsyncBatcher:
                     self.pump_errors += 1
                     self.last_pump_error = exc
 
-        self._thread = threading.Thread(target=pump, daemon=True,
-                                        name="AsyncBatcher-pump")
-        self._thread.start()
+        with self._lock:
+            if self._stopped:
+                raise RuntimeError("cannot start a stopped AsyncBatcher")
+            if self._thread is not None:
+                raise RuntimeError("pump thread already running")
+            self._stop_event.clear()
+            thread = threading.Thread(target=pump, daemon=True,
+                                      name="AsyncBatcher-pump")
+            self._thread = thread
+        thread.start()
         return self
 
     def stop(self) -> int:
         """Retire this batcher: stop the pump, flush pending, reject
         all later submits. Idempotent — a second stop() is a no-op that
         flushes an empty queue. Returns the requests flushed by THIS
-        call (what a hot-swap drained into the outgoing model)."""
+        call (what a hot-swap drained into the outgoing model).
+
+        The thread handle is claimed under _lock (two concurrent
+        stop() calls must not both join-and-clear it), but join()
+        happens OUTSIDE: the pump's poll()->flush() takes _lock, so
+        joining while holding it would deadlock.
+        """
         with self._lock:
             self._stopped = True
-        if self._thread is not None:
+            thread, self._thread = self._thread, None
+        if thread is not None:
             self._stop_event.set()
-            self._thread.join()
-            self._thread = None
+            thread.join()
         return self.flush()
 
     def __enter__(self) -> "AsyncBatcher":

@@ -317,13 +317,13 @@ class SketchAccumulator:
         Xpre = self._X[:, :q + b]
         C = self._X[:, q:q + b]
         if isinstance(self.sketch, SRHT):
-            O = srht_rows(self.sketch, 0, q + b)
+            Omega = srht_rows(self.sketch, 0, q + b)
             cross = srht_rows(self.sketch, q, q + b)
         else:
-            O = self.sketch.omega[:q + b]
+            Omega = self.sketch.omega[:q + b]
             cross = self.sketch.omega[q:q + b]
         new_rows, delta, rn_rows, rn_cols = fit_sketch_pallas(
-            Xpre, O, C, cross, kind=kind, gamma=float(gamma),
+            Xpre, Omega, C, cross, kind=kind, gamma=float(gamma),
             degree=int(degree), interpret=self._fit_interpret)
         W = W.at[q:q + b].set(new_rows)
         row_norms2 = row_norms2.at[q:q + b].set(rn_cols)
@@ -371,15 +371,16 @@ class SketchAccumulator:
             Wn = (U[:, :r] * S[None, :r]) @ Vt[:r]
         if isinstance(self.sketch, SRHT):
             if n_eff == self.capacity:
-                omega_t_q = lambda Q: srht_apply_t(self.sketch, Q,
-                                                   self.fwht_fn)
+                def omega_t_q(Q):
+                    return srht_apply_t(self.sketch, Q, self.fwht_fn)
             else:
                 def omega_t_q(Q):
                     Qp = jnp.zeros((self.capacity, Q.shape[1]),
                                    Q.dtype).at[:n_eff].set(Q)
                     return srht_apply_t(self.sketch, Qp, self.fwht_fn)
         else:
-            omega_t_q = lambda Q: self.sketch.omega[:n_eff].T @ Q
+            def omega_t_q(Q):
+                return self.sketch.omega[:n_eff].T @ Q
         out = one_pass_core(Wn, omega_t_q, r)
         fro2 = float(jnp.sum(rn))
         tail2 = max(fro2 - float(jnp.sum(out.eigvals ** 2)), 0.0)

@@ -122,10 +122,18 @@ class DriftMonitor:
 
         Xq: (p, b) queries; labels: the (b,) labels they were served
         (None recomputes them through the bound model). The approx-error
-        estimator runs on every `sample_every`-th call."""
-        Xq = jnp.asarray(Xq, jnp.float32)
+        estimator runs on every `sample_every`-th call.
+
+        Xq only goes to the device on the paths that compute with it
+        (label recompute, sampled error estimate). The common serving
+        call — labels provided, not a sampled call — must not pay a
+        host->device copy of the whole query block per observe(): this
+        runs once per served batch.
+        """
+        if not hasattr(Xq, "shape"):        # host-side normalization only
+            Xq = np.asarray(Xq, np.float32)
         if labels is None:
-            labels, _ = self._extender.assign(Xq)
+            labels, _ = self._extender.assign(jnp.asarray(Xq, jnp.float32))
         labels = np.asarray(labels)
         self._counts += np.bincount(labels, minlength=self.k
                                     )[:self.k].astype(np.float64)
@@ -133,7 +141,8 @@ class DriftMonitor:
         sampled = self._calls % self.sample_every == 0
         self._calls += 1
         if sampled:
-            for err in np.asarray(self._approx_errors(Xq)):
+            errs = self._approx_errors(jnp.asarray(Xq, jnp.float32))
+            for err in np.asarray(errs):
                 self._hist.record(float(err))
             self.samples += int(Xq.shape[1])
 

@@ -26,7 +26,10 @@ class AdamWConfig:
 
 def adamw_init(params, cfg: AdamWConfig) -> Dict:
     dt = jnp.dtype(cfg.moment_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     return {"m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
             "step": jnp.zeros((), jnp.int32)}

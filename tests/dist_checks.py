@@ -61,8 +61,10 @@ def check_sharded_train_step():
     batch = specs.train_inputs(cfg, 32, 4, concrete=True,
                                key=jax.random.PRNGKey(1))
     batch_spec = shd.batch_pspecs(jax.eval_shape(lambda: batch), mesh)
-    ns = lambda spec: jax.tree.map(lambda p: NamedSharding(mesh, p), spec,
-                                   is_leaf=lambda q: isinstance(q, P))
+
+    def ns(spec):
+        return jax.tree.map(lambda p: NamedSharding(mesh, p), spec,
+                            is_leaf=lambda q: isinstance(q, P))
     state = jax.device_put(state, ns(state_spec))
     batch = jax.device_put(batch, ns(batch_spec))
     with mesh:
@@ -97,8 +99,10 @@ def check_sharded_vs_single_device_loss():
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     ps = shd.param_pspecs(jax.eval_shape(lambda: params), mesh)
     bs = shd.batch_pspecs(jax.eval_shape(lambda: batch), mesh)
-    ns = lambda spec: jax.tree.map(lambda p: NamedSharding(mesh, p), spec,
-                                   is_leaf=lambda q: isinstance(q, P))
+
+    def ns(spec):
+        return jax.tree.map(lambda p: NamedSharding(mesh, p), spec,
+                            is_leaf=lambda q: isinstance(q, P))
     params_s = jax.device_put(params, ns(ps))
     batch_s = jax.device_put(batch, ns(bs))
     with mesh:

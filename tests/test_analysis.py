@@ -1,0 +1,587 @@
+"""repro.analysis test suite.
+
+One seeded-violation + one clean fixture per rule (J001-J004, C001-C003,
+L001-L003, X001), the scheduler lock-order regression (the checker must
+flag inverted acquisition of the real serve/scheduler.py contract), the
+kernel-contract verifier over every registered package at every parity
+shape, baseline semantics, and the whole-repo clean gate CI runs.
+"""
+import io
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import jaxlint, locks, runner
+from repro.analysis.baseline import (BaselineError, Suppression,
+                                     apply_baseline, load_baseline)
+from repro.analysis.findings import RULES, Finding
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def lint(src: str):
+    return jaxlint.lint_source(textwrap.dedent(src), "fixture.py")
+
+
+def lockcheck(src: str):
+    return locks.check_source(textwrap.dedent(src), "fixture.py")
+
+
+def rule_ids(findings):
+    return sorted(f.rule for f in findings)
+
+
+# -- J001: PRNG key reuse ---------------------------------------------------
+
+def test_j001_fires_on_double_consumption():
+    findings = lint("""
+        import jax
+
+        def draw(key):
+            a = jax.random.normal(key, (3,))
+            b = jax.random.uniform(key, (3,))
+            return a + b
+    """)
+    assert rule_ids(findings) == ["J001"]
+
+
+def test_j001_clean_after_split():
+    findings = lint("""
+        import jax
+
+        def draw(key):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (3,))
+            b = jax.random.uniform(k2, (3,))
+            return a + b
+    """)
+    assert findings == []
+
+
+def test_j001_fires_on_loop_consuming_outer_key():
+    findings = lint("""
+        import jax
+
+        def draw(key):
+            outs = []
+            for i in range(4):
+                outs.append(jax.random.normal(key, (3,)))
+            return outs
+    """)
+    assert rule_ids(findings) == ["J001"]
+    assert "loop" in findings[0].message
+
+
+def test_j001_clean_fold_in_per_iteration():
+    # fold_in DERIVES a fresh stream per iteration — the canonical
+    # pattern (cf. core/cluster.py) must not fire.
+    findings = lint("""
+        import jax
+
+        def draw(key):
+            outs = []
+            for i in range(4):
+                k = jax.random.fold_in(key, i)
+                outs.append(jax.random.normal(k, (3,)))
+            return outs
+    """)
+    assert findings == []
+
+
+def test_j001_clean_branch_exclusive_uses():
+    # Double use split across exclusive if/else branches is NOT reuse
+    # (cf. launch/specs.py); the branches cannot both run.
+    findings = lint("""
+        import jax
+
+        def draw(key, discrete):
+            if discrete:
+                return jax.random.randint(key, (3,), 0, 7)
+            return jax.random.normal(key, (3,))
+    """)
+    assert findings == []
+
+
+def test_j001_fires_when_branch_falls_through():
+    findings = lint("""
+        import jax
+
+        def draw(key, noisy):
+            if noisy:
+                extra = jax.random.normal(key, (3,))
+            return jax.random.uniform(key, (3,))
+    """)
+    assert rule_ids(findings) == ["J001"]
+
+
+# -- J002: host sync inside traced scope ------------------------------------
+
+def test_j002_fires_on_item_inside_jit():
+    findings = lint("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            return x.sum().item()
+    """)
+    assert rule_ids(findings) == ["J002"]
+
+
+def test_j002_fires_on_float_over_tracer():
+    findings = lint("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x) + 1.0
+    """)
+    assert rule_ids(findings) == ["J002"]
+
+
+def test_j002_clean_outside_jit():
+    findings = lint("""
+        def f(x):
+            return float(x.sum().item())
+    """)
+    assert findings == []
+
+
+# -- J003: Python branch on a tracer ----------------------------------------
+
+def test_j003_fires_on_tracer_branch():
+    findings = lint("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x.sum() > 0:
+                return x
+            return -x
+    """)
+    assert rule_ids(findings) == ["J003"]
+
+
+def test_j003_clean_static_and_shape_branches():
+    # static_argnums marks `normalize` concrete; .shape is concrete on
+    # tracers. Neither branch may fire (regression: static_argnums was
+    # once ignored and core/sketch.py false-positived).
+    findings = lint("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnums=(1,))
+        def f(x, normalize):
+            if normalize:
+                x = x / 2.0
+            if x.shape[0] > 2:
+                return x
+            return -x
+    """)
+    assert findings == []
+
+
+# -- J004: mutable static jit args ------------------------------------------
+
+def test_j004_fires_on_dict_static():
+    findings = lint("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("opts",))
+        def f(x, opts: dict):
+            return x
+    """)
+    assert rule_ids(findings) == ["J004"]
+
+
+def test_j004_fires_on_non_frozen_dataclass_static():
+    findings = lint("""
+        import dataclasses
+        import functools
+        import jax
+
+        @dataclasses.dataclass
+        class Cfg:
+            n: int = 1
+
+        @functools.partial(jax.jit, static_argnames=("cfg",))
+        def f(x, cfg: Cfg):
+            return x
+    """)
+    assert rule_ids(findings) == ["J004"]
+    assert "frozen" in findings[0].message
+
+
+def test_j004_clean_frozen_dataclass_static():
+    # The ComputePolicy pattern: frozen dataclass statics hash by value.
+    findings = lint("""
+        import dataclasses
+        import functools
+        import jax
+
+        @dataclasses.dataclass(frozen=True)
+        class Policy:
+            n: int = 1
+
+        @functools.partial(jax.jit, static_argnames=("policy",))
+        def f(x, policy: Policy):
+            return x
+    """)
+    assert findings == []
+
+
+# -- X001: unparseable file -------------------------------------------------
+
+def test_x001_fires_on_syntax_error():
+    findings = lint("def broken(:\n")
+    assert rule_ids(findings) == ["X001"]
+
+
+# -- L001: guarded-by discipline --------------------------------------------
+
+_LOCKED_CLASS = """
+    import threading
+
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._items = []   # guarded-by: _lock
+
+        def add(self, x):
+            {body}
+"""
+
+
+def test_l001_fires_on_unlocked_mutation():
+    findings = lockcheck(
+        _LOCKED_CLASS.format(body="self._items.append(x)"))
+    assert rule_ids(findings) == ["L001"]
+
+
+def test_l001_clean_under_lock():
+    findings = lockcheck(_LOCKED_CLASS.format(
+        body="with self._lock:\n                self._items.append(x)"))
+    assert findings == []
+
+
+def test_l001_fires_on_unlocked_rebind():
+    # The pre-fix scheduler.stop() shape: rebinding the guarded handle
+    # outside the lock.
+    findings = lockcheck("""
+        import threading
+
+        class Sched:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._thread = None   # guarded-by: _lock
+
+            def stop(self):
+                self._thread = None
+    """)
+    assert rule_ids(findings) == ["L001"]
+
+
+def test_l001_clean_tuple_swap_then_join_outside():
+    # The fixed scheduler.stop() shape: claim under the lock via tuple
+    # swap, join the local handle after release.
+    findings = lockcheck("""
+        import threading
+
+        class Sched:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._thread = None   # guarded-by: _lock
+
+            def stop(self):
+                with self._lock:
+                    thread, self._thread = self._thread, None
+                if thread is not None:
+                    thread.join()
+    """)
+    assert findings == []
+
+
+# -- L002: lock-order contract ----------------------------------------------
+
+_ORDERED_CLASS = """
+    import threading
+
+    # lock-order: _flush_lock -> _lock
+
+    class Sched:
+        def __init__(self):
+            self._flush_lock = threading.Lock()
+            self._lock = threading.Lock()
+
+        def run(self):
+            {body}
+"""
+
+
+def test_l002_fires_on_inverted_acquisition():
+    findings = lockcheck(_ORDERED_CLASS.format(
+        body="with self._lock:\n                "
+             "with self._flush_lock:\n                    pass"))
+    assert rule_ids(findings) == ["L002"]
+
+
+def test_l002_clean_contract_order():
+    findings = lockcheck(_ORDERED_CLASS.format(
+        body="with self._flush_lock:\n                "
+             "with self._lock:\n                    pass"))
+    assert findings == []
+
+
+# -- L003: annotation rot ---------------------------------------------------
+
+def test_l003_fires_on_guard_naming_missing_lock():
+    findings = lockcheck("""
+        class Box:
+            def __init__(self):
+                self._items = []   # guarded-by: _lock
+    """)
+    assert rule_ids(findings) == ["L003"]
+
+
+def test_l003_fires_on_lock_order_naming_missing_lock():
+    findings = lockcheck("""
+        import threading
+
+        # lock-order: _flush_lock -> _lock
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+    """)
+    assert rule_ids(findings) == ["L003"]
+
+
+# -- the real serve tier ----------------------------------------------------
+
+def test_scheduler_declares_and_passes_lock_contract():
+    src = (REPO / "src/repro/serve/scheduler.py").read_text()
+    assert "# lock-order: _flush_lock -> _lock" in src
+    assert "# guarded-by: _lock" in src
+    assert locks.check_source(src, "src/repro/serve/scheduler.py") == []
+
+
+def test_scheduler_inverted_lock_order_is_flagged():
+    """Regression for the documented acquisition order: flipping the
+    real scheduler's nested acquisition must produce L002."""
+    src = (REPO / "src/repro/serve/scheduler.py").read_text()
+    inverted = textwrap.indent(textwrap.dedent("""
+        def _inverted(self):
+            with self._lock:
+                with self._flush_lock:
+                    return len(self._queue)
+    """), "    ")
+    findings = locks.check_source(src + inverted, "scheduler_inverted.py")
+    assert [f.rule for f in findings] == ["L002"]
+    assert "_flush_lock" in findings[0].message
+
+
+def test_registry_passes_lock_contract():
+    src = (REPO / "src/repro/serve/registry.py").read_text()
+    assert "# guarded-by: _lock" in src
+    assert locks.check_source(src, "src/repro/serve/registry.py") == []
+
+
+# -- kernel memory contracts (C001/C002/C003) -------------------------------
+
+def _kernel_names():
+    import repro.kernels  # noqa: F401  -- populates the registry
+    from repro.kernels.registry import registered_kernels
+    return registered_kernels()
+
+
+@pytest.mark.parametrize("name", _kernel_names())
+def test_contract_matches_blockspecs_at_every_parity_shape(name):
+    from repro.analysis.contracts import capture_case
+    from repro.kernels.registry import get_contract, get_kernel
+
+    entry = get_kernel(name)
+    contract = get_contract(name)
+    assert contract is not None, f"{name} has no memory contract (C003)"
+    for case in entry.cases:
+        reports = capture_case(entry, case)
+        assert reports, f"{name} {case}: no pallas_call captured"
+        derived = float(sum(r.hbm_bytes for r in reports))
+        declared = float(contract.declared(case)["hbm_bytes"])
+        assert abs(derived - declared) <= 0.5, (
+            f"{name} {case}: declared {declared:.0f} B, "
+            f"BlockSpecs imply {derived:.0f} B")
+        for rep in reports:
+            assert rep.vmem_bytes <= contract.vmem_budget
+
+
+def _shrunk_registry(monkeypatch, name, contract):
+    """Restrict the registry to one kernel with the given contract."""
+    import repro.kernels  # noqa: F401
+    from repro.kernels import registry
+
+    entry = registry.get_kernel(name)
+    monkeypatch.setattr(registry, "_REGISTRY", {name: entry})
+    monkeypatch.setattr(
+        registry, "_CONTRACTS", {} if contract is None
+        else {name: contract})
+    return entry
+
+
+def test_c001_fires_on_seeded_divergent_contract(monkeypatch):
+    from repro.analysis.contracts import verify_contracts
+    from repro.kernels.registry import KernelContract
+
+    _shrunk_registry(monkeypatch, "gram_stripe", KernelContract(
+        name="gram_stripe", declared=lambda case: {"hbm_bytes": 1.0}))
+    findings = verify_contracts()
+    assert findings and all(f.rule == "C001" for f in findings)
+
+
+def test_c002_fires_on_seeded_tiny_vmem_budget(monkeypatch):
+    from repro.analysis.contracts import verify_contracts
+    from repro.kernels.registry import KernelContract, get_contract
+
+    good = get_contract("gram_stripe")
+    _shrunk_registry(monkeypatch, "gram_stripe", KernelContract(
+        name="gram_stripe", declared=good.declared, vmem_budget=1))
+    findings = verify_contracts()
+    assert findings and all(f.rule == "C002" for f in findings)
+
+
+def test_c003_fires_on_missing_contract(monkeypatch):
+    from repro.analysis.contracts import verify_contracts
+
+    _shrunk_registry(monkeypatch, "gram_stripe", None)
+    findings = verify_contracts()
+    assert [f.rule for f in findings] == ["C003"]
+
+
+# -- baseline semantics -----------------------------------------------------
+
+def test_baseline_missing_file_means_no_suppressions(tmp_path):
+    assert load_baseline(tmp_path / "nope.toml") == []
+
+
+def test_baseline_rejects_missing_reason(tmp_path):
+    p = tmp_path / "b.toml"
+    p.write_text('[[suppress]]\nrule = "J001"\npath = "x.py"\n')
+    with pytest.raises(BaselineError):
+        load_baseline(p)
+
+
+def test_baseline_rejects_unknown_rule(tmp_path):
+    p = tmp_path / "b.toml"
+    p.write_text('[[suppress]]\nrule = "Z999"\npath = "x.py"\n'
+                 'reason = "nope"\n')
+    with pytest.raises(BaselineError):
+        load_baseline(p)
+
+
+def test_apply_baseline_partitions_and_reports_stale():
+    f1 = Finding("J001", "a.py", 3, "f", "reused")
+    f2 = Finding("J001", "b.py", 9, "g", "reused")
+    sup_hit = Suppression("J001", "a.py", "f", "intentional shared draw")
+    sup_stale = Suppression("L001", "c.py", "", "gone")
+    active, suppressed, stale = apply_baseline([f1, f2],
+                                               [sup_hit, sup_stale])
+    assert active == [f2]
+    assert suppressed == [f1]
+    assert stale == [sup_stale]
+
+
+def test_repo_baseline_parses():
+    # The checked-in baseline must never rot into a parse error.
+    load_baseline(REPO / "analysis_baseline.toml")
+
+
+# -- runner / CLI gate ------------------------------------------------------
+
+def _write_fixture(tmp_path, source):
+    p = tmp_path / "seeded.py"
+    p.write_text(textwrap.dedent(source))
+    return p
+
+
+def test_runner_exits_nonzero_on_seeded_violation(tmp_path):
+    p = _write_fixture(tmp_path, """
+        import jax
+
+        def draw(key):
+            a = jax.random.normal(key, (3,))
+            return a + jax.random.normal(key, (3,))
+    """)
+    buf = io.StringIO()
+    rc = runner.run([str(p)], baseline=str(tmp_path / "none.toml"),
+                    contracts=False, out=buf)
+    assert rc == 1
+    assert "J001" in buf.getvalue()
+
+
+def test_runner_exits_zero_on_clean_file(tmp_path):
+    p = _write_fixture(tmp_path, """
+        def f(x):
+            return x + 1
+    """)
+    buf = io.StringIO()
+    rc = runner.run([str(p)], baseline=str(tmp_path / "none.toml"),
+                    contracts=False, out=buf)
+    assert rc == 0
+
+
+def test_runner_suppression_downgrades_to_zero(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    p = _write_fixture(tmp_path, """
+        import jax
+
+        def draw(key):
+            a = jax.random.normal(key, (3,))
+            return a + jax.random.normal(key, (3,))
+    """)
+    (tmp_path / "b.toml").write_text(
+        '[[suppress]]\nrule = "J001"\npath = "seeded.py"\n'
+        'symbol = "draw"\nreason = "fixture: same draw on purpose"\n')
+    buf = io.StringIO()
+    rc = runner.run([str(p)], baseline="b.toml", contracts=False, out=buf)
+    assert rc == 0
+    assert "suppressed" in buf.getvalue()
+
+
+def test_runner_writes_github_step_summary(tmp_path, monkeypatch):
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    p = _write_fixture(tmp_path, """
+        import jax
+
+        def draw(key):
+            a = jax.random.normal(key, (3,))
+            return a + jax.random.normal(key, (3,))
+    """)
+    rc = runner.run([str(p)], baseline=str(tmp_path / "none.toml"),
+                    contracts=False, out=io.StringIO())
+    assert rc == 1
+    text = summary.read_text()
+    assert "repro.analysis findings" in text and "ACTIVE" in text
+
+
+def test_runner_rejects_missing_path(tmp_path):
+    rc = runner.run([str(tmp_path / "ghost")], contracts=False,
+                    out=io.StringIO())
+    assert rc == 2
+
+
+def test_list_rules_covers_catalogue(capsys):
+    assert runner.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in RULES:
+        assert rule in out
+
+
+def test_whole_repo_is_clean(monkeypatch):
+    """The CI gate: `python -m repro.analysis src tests` must exit 0 —
+    zero unsuppressed findings across the repo, kernel contracts
+    included."""
+    monkeypatch.chdir(REPO)
+    buf = io.StringIO()
+    rc = runner.run(["src", "tests"], contracts=True, out=buf)
+    assert rc == 0, buf.getvalue()
