@@ -20,6 +20,10 @@ Gated metrics:
           re-eig wall seconds                  (higher = regression)
   fit_scaling  single-host + sharded one-pass fit cols/sec per n
                                                (lower = regression)
+  fleet   queries_per_sec per worker count     (lower = regression)
+          admitted p99 ms under overload       (higher = regression;
+            this is THE shedding claim: the queue cap bounds the
+            admitted tail even when 90% of offered load is refused)
 
 Informational (reported, never gated): async queue-wait p95, the
 swap flip duration — at ~1 ms / ~1 us scale they are OS-scheduler
@@ -73,13 +77,18 @@ def _dig(d: Dict, *path):
 # time includes K-means restarts and eigh — too machine-noisy to gate,
 # unlike the same section's accuracy/throughput.
 INFO_METRICS = {"async/queue_wait_p95_ms", "swap/flip_ms",
-                "stream/detect_to_swap_s"}
+                "stream/detect_to_swap_s", "fleet/promote_s",
+                "fleet/rollback_s", "fleet/overload_shed_rate"}
 # fit_scaling_bytes/* is the analytic bytes-moved model (HLO traffic
 # counts) — it moves only when the kernels change, so it is reported for
 # the roofline story but never gated on a tolerance meant for timing.
 INFO_PREFIXES = ("backends/fit_s/", "fit_scaling_bytes/")
 # Dimensionless metrics: machine speed is irrelevant, never rescale.
-NO_NORMALIZE_PREFIXES = ("backends/accuracy/", "fit_scaling_bytes/")
+# The fleet shed rate is a RATIO of offered load (a property of the
+# admission caps, not of machine speed); the rollout walls embed compile
+# warmup, same noise class as fit_s.
+NO_NORMALIZE_PREFIXES = ("backends/accuracy/", "fit_scaling_bytes/",
+                         "fleet/overload_shed_rate")
 
 
 def collect_metrics(bench: Dict) -> Dict[str, Tuple[float, bool]]:
@@ -128,6 +137,24 @@ def collect_metrics(bench: Dict) -> Dict[str, Tuple[float, bool]]:
     d2s = _dig(bench, "stream", "rollout", "detect_to_swap_s")
     if d2s is not None:
         out["stream/detect_to_swap_s"] = (float(d2s), False)
+    # Fleet soak: tier throughput per worker count and the admitted-
+    # request p99 under overload are gated (each worker-count row diffs
+    # against its own baseline — no cross-N speedup assert, a 1-CPU
+    # runner cannot promise one); shed rate and rollout walls are info.
+    for row in (_dig(bench, "fleet", "sweep") or []):
+        out[f"fleet/workers={row['workers']}/queries_per_sec"] = (
+            float(row["queries_per_sec"]), True)
+    op99 = _dig(bench, "fleet", "overload", "admitted_p99_ms")
+    if op99 is not None:
+        out["fleet/overload_admitted_p99_ms"] = (float(op99), False)
+    orate = _dig(bench, "fleet", "overload", "shed_rate")
+    if orate is not None:
+        out["fleet/overload_shed_rate"] = (float(orate), False)
+    for metric, path in (("promote_s", ("promote", "wall_s")),
+                         ("rollback_s", ("rollback", "wall_s"))):
+        v = _dig(bench, "fleet", "rollout", *path)
+        if v is not None:
+            out[f"fleet/{metric}"] = (float(v), False)
     # Sharded-fit scaling sweep: ingest throughput (single-host and
     # mesh-sharded) is gated per n; the bytes-moved model is analytic
     # (INFO_PREFIXES / NO_NORMALIZE_PREFIXES above).

@@ -36,11 +36,23 @@ onepass-gaussian | nystrom | exact):
      warm-swaps — asserted: exactly one rollout, zero stranded futures,
      post-swap accuracy on the drifted distribution beats the stale
      model. `--bench stream` (in `all`) adds the partial_fit/re-eig/
-     detection-to-swap numbers to BENCH_serve.json.
+     detection-to-swap numbers to BENCH_serve.json,
+  9. with --fleet, run the multi-worker tier (repro.fleet):
+     --fleet-workers replicas over one shared VersionStore behind the
+     routed/admission-controlled front door — asserted: fleet-routed
+     labels match direct assignment bit-identically, GC cannot delete a
+     version the workers pin, a canary-then-promote rollout lands every
+     worker on the new version with zero stranded futures, a rollout
+     whose canary probe breaches the budget rolls back to the prior
+     version, and a flood past a tiny admission cap sheds (typed
+     ShedError) with shed_rate > 0. `--bench fleet` (in `all`) adds the
+     q/s-vs-worker-count/overload/rollout soak numbers.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_cluster --smoke --swap
   PYTHONPATH=src python -m repro.launch.serve_cluster --smoke --stream
+  PYTHONPATH=src python -m repro.launch.serve_cluster --smoke --fleet \
+      --fleet-workers 2 --bench fleet
   PYTHONPATH=src python -m repro.launch.serve_cluster --smoke \
       --backend nystrom            # full stack on a Nystrom fit
   PYTHONPATH=src python -m repro.launch.serve_cluster --n 8000 --r 2 \
@@ -88,11 +100,18 @@ def main():
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--bench", default="all",
                     choices=["sync", "async", "fused", "swap", "backends",
-                             "stream", "fit_scaling", "all"],
+                             "stream", "fit_scaling", "fleet", "all"],
                     help="which benchmark modes land in BENCH_serve.json")
     ap.add_argument("--swap", action="store_true",
                     help="exercise the model lifecycle: publish versions, "
                          "warm hot-swap under pending async traffic, GC")
+    ap.add_argument("--fleet", action="store_true",
+                    help="run the multi-worker fleet tier checks: routing "
+                         "parity, gc-under-pin, canary-then-promote "
+                         "rollout + probe-breached rollback, overload "
+                         "shedding (all asserted)")
+    ap.add_argument("--fleet-workers", type=int, default=2,
+                    help="replica count for --fleet")
     ap.add_argument("--stream", action="store_true",
                     help="run the streaming drift loop demo: partial_fit "
                          "on an initial distribution, drifted async "
@@ -392,6 +411,107 @@ def main():
               f"{rollout.swap.drained_requests} pending, stranded 0; "
               f"drifted-set accuracy {stale_acc:.2f} -> {new_acc:.2f}")
 
+    # Check 7 (--fleet): the multi-worker tier — N replicas over ONE
+    # shared VersionStore behind the routed/admission-controlled front
+    # door. Gated: fleet labels == direct assignment, gc-under-pin,
+    # canary-then-promote with zero stranded futures, probe-breached
+    # rollback restoring the prior version, overload shedding.
+    if args.fleet:
+        from repro.fleet import Fleet, ShedError
+        from repro.serve import VersionStore
+        if args.fleet_workers < 1:
+            ap.error("--fleet-workers must be >= 1")
+        f_store = VersionStore(args.artifact_dir + "_fleet_versions")
+        fv1 = f_store.publish(model)
+        # rollout_budget_ms is generous on purpose: the 7c canary probe
+        # pays first-flush compile spikes (cold workers, by design), and
+        # this check is about the PROMOTE path; the breach path is
+        # forced explicitly in 7d, machine speed must not pick for us.
+        fleet = Fleet(f_store, n_workers=args.fleet_workers,
+                      slo_ms=args.slo_ms, max_wait_ms=args.max_wait_ms,
+                      rollout_budget_ms=60_000.0, block=args.block)
+        # 7a: routing only picks the replica; results must be
+        # bit-identical to direct assignment regardless of placement.
+        w = min(args.queries, 64)
+        f_splits = [w // 4, w // 2, 3 * w // 4] if w >= 4 else []
+        parts = np.split(np.asarray(Xq[:, :w]), f_splits, axis=1)
+        futs = [fleet.submit(part) for part in parts]
+        fleet.flush()
+        fleet_labels = np.concatenate([f.result()[0] for f in futs])
+        assert np.array_equal(fleet_labels,
+                              np.asarray(labels_bucketed[:w])), \
+            "fleet-routed labels != direct assignment"
+        assert {wk.version for wk in fleet.workers} == {fv1}
+        print(f"fleet: {args.fleet_workers} workers pinned to v{fv1} "
+              f"(pins: {f_store.pins(fv1)}), routed labels match "
+              f"direct assignment on {w} queries")
+        # 7b: GC with keep=1 would delete v1 — but every worker pins it,
+        # so it must survive (the pin-refcount guard).
+        model_b = model._replace(centroids=model.centroids[::-1])
+        fv2 = f_store.publish(model_b)
+        f_store.gc(keep=1)
+        assert fv1 in f_store.versions(), \
+            f"GC deleted pinned v{fv1} out from under the fleet"
+        print(f"gc(keep=1) preserved pinned v{fv1} "
+              f"(pins: {f_store.pins(fv1)})")
+        # 7c: canary-then-promote to v2 with requests pending — every
+        # worker lands on v2, the pending futures resolve (old model).
+        pending = [fleet.submit(part) for part in parts]
+        rollout = fleet.rollout(fv2)
+        fleet.flush()
+        assert rollout is not None and rollout.promoted, \
+            f"canary-then-promote failed: {rollout}"
+        assert all(wk.version == fv2 for wk in fleet.workers), \
+            "promote left a worker on the old version"
+        stranded = sum(not f.done() for f in pending)
+        assert stranded == 0, f"rollout stranded {stranded} futures"
+        old_roll_labels = np.concatenate([f.result()[0] for f in pending])
+        assert np.array_equal(old_roll_labels,
+                              np.asarray(labels_bucketed[:w])), \
+            "pre-rollout requests must resolve against the old version"
+        futs = [fleet.submit(part) for part in parts]
+        fleet.flush()
+        new_roll_labels = np.concatenate([f.result()[0] for f in futs])
+        want_new, _ = assign(f_store.load(fv2), Xq[:, :w])
+        assert np.array_equal(new_roll_labels, np.asarray(want_new)), \
+            "post-rollout requests must resolve against the new version"
+        print(f"canary-then-promote v{fv1} -> v{fv2}: "
+              f"{rollout.state} in {rollout.wall_s:.3f} s "
+              f"(canary {rollout.canary_id} p95 "
+              f"{rollout.canary_p95_ms:.2f} ms <= budget "
+              f"{rollout.budget_ms:.0f} ms), 0 stranded futures")
+        # 7d: a rollout whose canary probe breaches the budget must roll
+        # back — fleet stays on v2, v3 stays in the store untouched.
+        fv3 = f_store.publish(model)
+        bad = fleet.rollout(fv3, probe=lambda wk: float("inf"))
+        assert bad is not None and bad.state == "rolled-back" \
+            and not bad.promoted, f"breached canary did not roll back: {bad}"
+        assert all(wk.version == fv2 for wk in fleet.workers), \
+            "rollback did not restore the prior version"
+        assert fv3 in f_store.versions(), "rollback deleted the target"
+        print(f"breached canary rolled back: fleet stays on v{fv2}, "
+              f"v{fv3} intact for a retry")
+        fleet.stop()
+        # 7e: overload — a flood past a tiny admission cap must shed
+        # (typed ShedError), and the counters must say so.
+        tiny = Fleet(f_store, n_workers=args.fleet_workers, version=fv2,
+                     slo_ms=args.slo_ms, max_wait_ms=args.max_wait_ms,
+                     max_queue_depth=8, block=args.block)
+        shed = 0
+        for i in range(32):
+            try:
+                tiny.submit(np.asarray(Xq[:, :4]))
+            except ShedError as e:
+                assert e.reason == "queue-full", e.reason
+                shed += 1
+        tiny.flush()
+        rate = tiny.admission.shed_rate
+        tiny.stop()
+        assert shed > 0 and rate > 0.0, \
+            f"flood past depth 8 shed nothing (shed={shed}, rate={rate})"
+        print(f"overload: shed {shed}/32 requests past depth-8 caps "
+              f"(shed_rate {rate:.0%}, typed ShedError)")
+
     # Optional: the mesh-sharded extension path against the local mesh.
     mesh = None
     if args.sharded:
@@ -414,7 +534,7 @@ def main():
     if not batch_sizes:
         ap.error(f"--batch-sizes {args.batch_sizes!r} parses to nothing")
     modes = (("sync", "async", "fused", "swap", "backends", "stream",
-              "fit_scaling")
+              "fit_scaling", "fleet")
              if args.bench == "all" else (args.bench,))
     embed_fused = {"auto": None, "on": True, "off": False}[args.fused_embed]
     from repro.serve import median_benches

@@ -1,6 +1,6 @@
 """Serving benchmarks: sync/async/fused/swap/backends, 1-device or sharded.
 
-Seven modes, all landing in BENCH_serve.json:
+Eight modes, all landing in BENCH_serve.json:
 
   sync     `benchmark_assign` — bucketed assignments/sec per batch size
            through MicroBatcher (one warmup call per size pays compile);
@@ -33,6 +33,11 @@ Seven modes, all landing in BENCH_serve.json:
            per-block bytes-moved model (canonical executables measured
            by launch/hlo_analysis, fused fit_sketch from its static
            memory contract) with roofline flops/byte coverage;
+  fleet    `repro.fleet.benchmark_fleet` — the multi-worker soak: q/s +
+           merged p99 per worker count (pump threads running), an
+           overload flood asserting shed-rate > 0 with admitted p99
+           within the SLO, and a canary-then-promote rollout plus a
+           probe-breached rollback (zero stranded futures asserted);
   sharded  sync/async with mesh= set — the extension matmul runs through
            serve.extend.ShardedExtender on the given mesh.
 
@@ -863,6 +868,15 @@ def run_benches(model: FittedModel, modes: Sequence[str] = ("sync", "async"),
         # directly) rather than the CLI driver.
         bench["fit_scaling"] = benchmark_fit_scaling(
             model, repeats=repeats, key=key, block=block)
+    if "fleet" in modes:
+        # Imported here, not at module top: repro.fleet composes the
+        # serve layer, so a top-level import would be circular via
+        # repro.serve.__init__.
+        from repro.fleet import benchmark_fleet
+        bench["fleet"] = benchmark_fleet(
+            model, max_wait_ms=max_wait_ms, slo_ms=slo_ms, key=key,
+            block=block, fused=fused, embed_fused=embed_fused,
+            interpret=interpret)
     if "backends" in modes:
         if data is None:
             bench["backends"] = {"skipped": "no (X, labels) data passed"}
@@ -956,6 +970,28 @@ def format_bench(bench: Dict) -> str:
             f" (refit {ro['refit_s']:.3f} s, publish {ro['publish_s']:.3f}"
             f" s, swap {ro['swap_s']:.3f} s)  stranded futures "
             f"{ro['stranded_futures']}")
+    if "fleet" in bench:
+        fl = bench["fleet"]
+        for row in fl["sweep"]:
+            lines.append(
+                f"fleet {row['workers']} worker"
+                f"{'s' if row['workers'] != 1 else ''}: "
+                f"{row['queries_per_sec']:>10.0f} q/s  "
+                f"p50 {row['p50_ms']:.2f} ms  p95 {row['p95_ms']:.2f} ms  "
+                f"p99 {row['p99_ms']:.2f} ms")
+        ov = fl["overload"]
+        lines.append(
+            f"  overload (depth {ov['max_queue_depth']}): shed "
+            f"{ov['shed']}/{ov['offered']} ({ov['shed_rate']:.0%})  "
+            f"admitted p99 {ov['admitted_p99_ms']:.2f} ms "
+            f"{'<=' if ov['within_slo'] else '>'} SLO {ov['slo_ms']:.0f} ms")
+        ro = fl["rollout"]
+        lines.append(
+            f"  rollout: promote v{ro['promote']['version']} in "
+            f"{ro['promote']['wall_s']:.3f} s (canary p95 "
+            f"{ro['promote']['canary_p95_ms']:.2f} ms)  rollback "
+            f"v{ro['rollback']['version']} -> {ro['rollback']['state']}  "
+            f"stranded futures {ro['stranded_futures']}")
     if "fit_scaling" in bench:
         fs = bench["fit_scaling"]
         for row in fs["rows"]:

@@ -83,6 +83,22 @@ class Histogram:
         self.min = min(self.min, ms)
         self.max = max(self.max, ms)
 
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold `other`'s samples into this histogram, in place.
+
+        Exact, not approximate: both histograms share the same fixed
+        bucket edges, so summing counts yields bit-for-bit the histogram
+        a single stream of the union of samples would have built — the
+        property the fleet tier's per-worker -> tier-level aggregation
+        relies on (tests/test_fleet.py pins it)."""
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.n += other.n
+        self.total += other.total
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        return self
+
     def percentile(self, q: float) -> float:
         """q in [0, 100]. Geometric interpolation inside the bucket; the
         observed min/max clamp the first/last occupied bucket so tiny
@@ -151,6 +167,45 @@ class LatencyStats:
         self.queries += int(queries)
         if self.slo_ms is not None and total_ms > self.slo_ms:
             self.slo_violations += 1
+
+    def merge(self, other: "LatencyStats") -> "LatencyStats":
+        """Fold another LatencyStats into this one, in place.
+
+        The fleet aggregation path: each worker keeps its own per-process
+        LatencyStats; the tier-level p50/p95/p99 summary is the merge of
+        all of them. Because every histogram shares the same fixed bucket
+        edges, merging is exact — the merged summary equals the summary a
+        single stream observing all samples (in any interleaving) would
+        report. Both sides must account the same SLO (otherwise the
+        summed violation counters would silently mix thresholds); merging
+        into a stats whose slo_ms is None adopts the other's threshold
+        only when no samples were recorded against None yet."""
+        if other.slo_ms != self.slo_ms:
+            if self.slo_ms is None and self.requests == 0:
+                self.slo_ms = other.slo_ms
+            else:
+                raise ValueError(
+                    f"cannot merge LatencyStats with different SLOs "
+                    f"({self.slo_ms!r} vs {other.slo_ms!r}): the summed "
+                    f"violation counters would mix thresholds")
+        self.queue_wait.merge(other.queue_wait)
+        self.total.merge(other.total)
+        for b, h in other.by_bucket.items():
+            self.by_bucket.setdefault(int(b), Histogram()).merge(h)
+        self.requests += other.requests
+        self.queries += other.queries
+        self.slo_violations += other.slo_violations
+        return self
+
+    @classmethod
+    def merged(cls, stats: "List[LatencyStats]",
+               slo_ms: Optional[float] = None) -> "LatencyStats":
+        """Fresh tier-level aggregate of per-worker stats (non-mutating)."""
+        out = cls(slo_ms=slo_ms if slo_ms is not None
+                  else (stats[0].slo_ms if stats else None))
+        for s in stats:
+            out.merge(s)
+        return out
 
     @property
     def slo_violation_rate(self) -> float:

@@ -46,7 +46,7 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import Future
-from typing import List, NamedTuple, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -93,6 +93,14 @@ class AsyncBatcher:
         # annotations below; mutations of annotated fields outside
         # `with self._lock` are build failures (rules L001/L002).
         self._queue: List[_Pending] = []      # guarded-by: _lock
+        # Per-bucket deadline overrides (milliseconds), keyed by the pow-2
+        # execution bucket the CURRENT pending window would coalesce into.
+        # This is the knob the fleet tier's AdaptiveWaitController turns:
+        # a bucket whose latency breakdown shows deadline pressure gets a
+        # shorter wait (less batching, more headroom); a comfortably-fast
+        # bucket earns a longer one. Unset buckets fall back to
+        # max_wait_ms. Read by due(); written via set_bucket_wait().
+        self._bucket_wait: Dict[int, float] = {}  # guarded-by: _lock
         self._lock = threading.Lock()         # guards the pending window
         self._flush_lock = threading.Lock()   # serializes inner drains
         self._thread: Optional[threading.Thread] = None  # guarded-by: _lock
@@ -148,14 +156,43 @@ class AsyncBatcher:
 
     # -- flush side ------------------------------------------------------
 
+    def set_bucket_wait(self, bucket: int, max_wait_ms: float) -> None:
+        """Override the flush deadline for one pow-2 execution bucket.
+
+        The AdaptiveWaitController's write path: buckets not overridden
+        keep the constructor's max_wait_ms."""
+        if max_wait_ms <= 0:
+            raise ValueError(f"max_wait_ms must be positive, "
+                             f"got {max_wait_ms!r}")
+        with self._lock:
+            self._bucket_wait[int(bucket)] = float(max_wait_ms)
+
+    def bucket_wait(self, bucket: int) -> float:
+        """Effective flush deadline (ms) for one pow-2 bucket."""
+        with self._lock:
+            return self._bucket_wait.get(int(bucket), self.max_wait_ms)
+
     def due(self, now: Optional[float] = None) -> bool:
-        """True when the oldest pending request has hit the deadline."""
+        """True when the oldest pending request has hit the deadline.
+
+        The deadline is per execution bucket when overridden
+        (set_bucket_wait): the wait that applies is the one for the
+        bucket the CURRENT pending window would coalesce into — as the
+        window grows into a larger bucket, that bucket's (usually
+        longer) wait takes over, which is exactly the batching-vs-
+        deadline trade the adaptive controller tunes."""
         now = self.clock() if now is None else now
         with self._lock:
             if not self._queue:
                 return False
-            return (now - self._queue[0].enqueue_ts) * 1e3 \
-                >= self.max_wait_ms
+            if self._bucket_wait:
+                b = bucket_size(self._pending_width_locked(),
+                                self.batcher.min_bucket,
+                                self.batcher.max_bucket)
+                wait = self._bucket_wait.get(b, self.max_wait_ms)
+            else:
+                wait = self.max_wait_ms
+            return (now - self._queue[0].enqueue_ts) * 1e3 >= wait
 
     def poll(self) -> int:
         """Flush if the deadline trigger fires; returns requests completed.
@@ -230,6 +267,12 @@ class AsyncBatcher:
 
     # -- background pump -------------------------------------------------
 
+    def _pump_period(self) -> float:
+        """Pump poll period: a quarter of the SHORTEST active deadline."""
+        with self._lock:
+            waits = list(self._bucket_wait.values())
+        return max(min(waits + [self.max_wait_ms]) / 4e3, 1e-4)
+
     @property
     def running(self) -> bool:
         """True while the background pump thread is alive."""
@@ -249,8 +292,11 @@ class AsyncBatcher:
         """
 
         def pump():
-            period = max(self.max_wait_ms / 4e3, 1e-4)
-            while not self._stop_event.wait(period):
+            # Re-read the period every cycle: the adaptive controller may
+            # shorten a bucket's wait below the constructor deadline, and
+            # a pump polling at the stale (longer) quarter-period would
+            # miss the new deadline by up to the difference.
+            while not self._stop_event.wait(self._pump_period()):
                 try:
                     self.poll()
                 except Exception as exc:   # batch futures carry the error

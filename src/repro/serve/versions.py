@@ -30,6 +30,14 @@ Version numbers are monotonic and never reused within a store's life —
 GC removes directories, not the counter, because `latest()` scans
 surviving dirs and publish allocates past them.
 
+Pins are the fleet-tier guard on top: a serving worker that loaded
+`v_<N>` records `pin(N, owner)` — one file per owner under
+`<root>/v_<N>.pins/` — and gc() NEVER removes a version any owner still
+pins, however old, so a fleet worker lagging a canary rollout can't have
+its serving artifact deleted out from under a rollback. `unpin` releases
+the refcount; pin dirs of fully-unpinned, already-GC'ed versions are
+swept by the next gc().
+
 ModelRegistry (serve/registry.py) layers the serving side on top:
 `registry.load_version(name, root)` for pinned/latest reads and
 `registry.swap(name, store.load())` for the warm hot-swap.
@@ -128,17 +136,70 @@ class VersionStore:
         """Load a pinned `version`, or the latest when None."""
         return load_model(self.path(version))
 
+    # -- pin refcounts (fleet workers vs GC) -----------------------------
+
+    def _pin_dir(self, version: int) -> pathlib.Path:
+        # ".pins" does not match _VERSION_RE and does not end in ".tmp",
+        # so pin dirs are invisible to versions() and the tmp sweep.
+        return self.root / f"v_{int(version)}.pins"
+
+    def pin(self, version: int, owner: str) -> int:
+        """Record that `owner` (e.g. a fleet worker id) serves `version`.
+
+        One file per owner — refcount by directory listing, so pins from
+        separate worker processes compose without any shared lock.
+        Idempotent per (version, owner). Raises FileNotFoundError for a
+        version that does not exist (nothing to protect). Returns the
+        version pinned (convenient for `pin(store.latest(), ...)`)."""
+        version = int(version)
+        self.path(version)                      # loud on missing version
+        d = self._pin_dir(version)
+        d.mkdir(parents=True, exist_ok=True)
+        (d / str(owner)).touch()
+        return version
+
+    def unpin(self, version: int, owner: str) -> None:
+        """Release `owner`'s pin on `version`; idempotent (a worker may
+        unpin during teardown after GC already swept the pin dir)."""
+        try:
+            (self._pin_dir(int(version)) / str(owner)).unlink()
+        except FileNotFoundError:
+            pass
+
+    def pins(self, version: int) -> List[str]:
+        """Owners currently pinning `version` (sorted; [] when none)."""
+        d = self._pin_dir(int(version))
+        if not d.is_dir():
+            return []
+        return sorted(p.name for p in d.iterdir())
+
     def gc(self, keep: Optional[int] = None) -> List[int]:
         """Keep the last `keep` versions, remove the rest (and .tmp dirs
         from CRASHED publishes — stale by > _TMP_TTL_S; an in-flight
-        concurrent publish is left alone); returns the versions removed."""
+        concurrent publish is left alone); returns the versions removed.
+
+        A version with live pins (see pin()) is NEVER removed, whatever
+        its age: a fleet worker still serving v_2 must be able to roll
+        back to it after the canary of v_5 breaches. Pin dirs of
+        versions that are gone and fully unpinned are swept here too."""
         keep = keep if keep is not None else self.keep
         if keep is None or keep < 1:
             raise ValueError(f"gc needs keep >= 1, got {keep!r}")
         removed = []
         for v in self.versions()[:-keep]:
+            if self.pins(v):                     # a worker still serves it
+                continue
             shutil.rmtree(self.root / f"v_{v}", ignore_errors=True)
             removed.append(v)
+        # Sweep pin dirs whose version is gone and whose refcount is zero
+        # (a worker unpinning after GC leaves an empty dir behind).
+        live = set(self.versions())
+        if self.root.exists():
+            for p in self.root.iterdir():
+                m = re.match(r"^v_(\d+)\.pins$", p.name)
+                if m and int(m.group(1)) not in live and not self.pins(
+                        int(m.group(1))):
+                    shutil.rmtree(p, ignore_errors=True)
         if self.root.exists():
             now = time.time()
             for p in self.root.iterdir():
